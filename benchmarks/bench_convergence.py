@@ -1,0 +1,39 @@
+"""Paper Fig 6: TSIA assigning iterations to converge vs N and vs M."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core import tsia, wireless
+
+N_SWEEP = (10, 30, 50)
+M_SWEEP = (3, 5, 8)
+
+
+def run(seeds=(0, 1)):
+    rows = []
+    for N in N_SWEEP:
+        iters = []
+        for seed in seeds:
+            spec = dataclasses.replace(wireless.ScenarioSpec(), N=N, M=5)
+            scn = wireless.draw_scenario(seed, spec)
+            res, _ = timed(tsia.solve, scn, 1.0)
+            iters.append(res.history.total_iters)
+        rows.append(row(f"fig6a/N={N}", 0.0,
+                        f"iters={np.mean(iters):.1f}+-{np.std(iters):.1f}"))
+    for M in M_SWEEP:
+        iters = []
+        for seed in seeds:
+            spec = dataclasses.replace(wireless.ScenarioSpec(), N=50, M=M)
+            scn = wireless.draw_scenario(seed, spec)
+            res, _ = timed(tsia.solve, scn, 1.0)
+            iters.append(res.history.total_iters)
+        rows.append(row(f"fig6b/M={M}", 0.0,
+                        f"iters={np.mean(iters):.1f}+-{np.std(iters):.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

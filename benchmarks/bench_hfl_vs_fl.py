@@ -1,0 +1,89 @@
+"""Paper Figs 7-8: HFL vs traditional FL — test accuracy and objective (15).
+
+Accuracy: both frameworks train the same users on the same (synthetic
+stand-in) data; one HFL global iteration = K x L local iterations, so FL
+runs K x more global iterations for equal local compute (the paper's
+protocol).  Objective: FL = single cloud server holding the total bandwidth
+sum_m B_m; HFL = SROA+TSIA plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core import sroa, tsia, wireless
+from repro.core.system_model import evaluate
+from repro.data import make_dataset, partition_to_users
+from repro.data.synthetic import DATASET_SHAPES
+from repro.fed.hfl import HflConfig, run_fl, run_hfl
+from repro.models import cnn
+
+LAM = 1.0
+
+
+def _fl_objective(scn: wireless.Scenario, lam=LAM):
+    """Traditional FL: every user talks to the cloud at the centre with the
+    pooled bandwidth; resources via the same SROA machinery (M=1 edge at
+    the cloud position with zero edge->cloud hop)."""
+    spec_edge = np.array([[250.0, 250.0]])
+    d = np.linalg.norm(np.asarray(scn.user_pos) - spec_edge, axis=1)
+    pl = wireless.path_loss_db(d / 1000.0)
+    gain = (10.0 ** (-pl / 10.0)).astype(np.float32)
+    scn_fl = scn._replace(
+        edge_pos=jax.numpy.asarray(spec_edge, jax.numpy.float32),
+        gain=jax.numpy.asarray(gain[:, None]),
+        # server == cloud: make the 2nd hop negligible but FINITE
+        gain_cloud=jax.numpy.asarray([1.0], jax.numpy.float32),
+        B_edges=jax.numpy.asarray([float(scn.B_total)], jax.numpy.float32),
+        B_cloud=jax.numpy.asarray([1e9], jax.numpy.float32),
+        p_edge=jax.numpy.asarray([1e-3], jax.numpy.float32),
+        K=jax.numpy.asarray(1.0, jax.numpy.float32),
+        I=scn.I * scn.K,                      # equal local compute
+    )
+    assign = np.zeros(scn.N, np.int32)
+    res = sroa.solve(scn_fl, assign, lam)
+    return float(evaluate(scn_fl, assign, res.b, res.f, res.p, lam).R)
+
+
+def run(datasets=("fashionmnist", "cifar10", "imagenette"), I=6,
+        seeds=(0,)):
+    rows = []
+    for seed in seeds:
+        scn = wireless.draw_scenario(seed)
+        t = tsia.solve(scn, LAM)
+        rows.append(row(f"fig8/seed{seed}/HFL", 0.0, f"R={t.R:.1f}"))
+        R_fl = _fl_objective(scn)
+        rows.append(row(f"fig8/seed{seed}/FL", 0.0, f"R={R_fl:.1f}"))
+        rows.append(row(f"fig8/seed{seed}/HFL<FL", 0.0, t.R < R_fl))
+
+    for ds_name in datasets:
+        ds = make_dataset(ds_name, n_train=2000, n_test=400,
+                          shape=DATASET_SHAPES[ds_name], seed=0)
+        rng = np.random.default_rng(0)
+        sizes = rng.integers(50, 80, size=20)
+        x_u, y_u, mask, sizes = partition_to_users(ds.x_train, ds.y_train,
+                                                   sizes)
+        cfg = cnn.PAPER_CNNS[ds_name]
+        w0 = cnn.init_params(cfg, jax.random.PRNGKey(0))
+        assign = np.arange(20) % 5
+        hcfg = HflConfig(L=2, K=2, I=I, lr=0.1)
+        (w_h, hist_h), us_h = timed(
+            run_hfl, cfg, w0, x_u, y_u, mask, sizes, assign, hcfg,
+            x_test=ds.x_test, y_test=ds.y_test)
+        fl_cfg = dataclasses.replace(hcfg, I=I * hcfg.K)
+        (w_f, hist_f), us_f = timed(
+            run_fl, cfg, w0, x_u, y_u, mask, sizes, fl_cfg,
+            x_test=ds.x_test, y_test=ds.y_test)
+        acc_h, acc_f = hist_h["acc"][-1], hist_f["acc"][-1]
+        rows.append(row(f"fig7/{ds_name}/HFL", us_h, f"acc={acc_h:.3f}"))
+        rows.append(row(f"fig7/{ds_name}/FL", us_f, f"acc={acc_f:.3f}"))
+        rows.append(row(f"fig7/{ds_name}/gap", 0.0,
+                        f"{abs(acc_h - acc_f):.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,52 @@
+"""Paper Fig 3: objective value (15) vs importance weight lambda
+(1e-3 .. 1e3) for SROA / HFEL / FEDL."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core import baselines, wireless
+from repro.core.system_model import evaluate
+
+LAMBDAS = (1e-3, 1e-1, 1.0, 1e1, 1e3)
+METHODS = ("SROA", "HFEL", "FEDL")
+
+
+def _sroa_plus(scn, assign, lam):
+    from repro.core import sroa
+    res = sroa.solve_plus(scn, assign, lam)
+    return baselines.RaResult(b=res.b, f=res.f, p=res.p)
+
+
+def run(seeds=(0, 1)):
+    """The paper itself notes one exception in Fig 3 (FDMA, lambda=10);
+    our reproduction shows the same behaviour at the smallest lambdas —
+    the value-guided bisection of Algorithm 4 can overshoot when the
+    objective is delay-insensitive.  The beyond-paper SROA+ (golden
+    refine) is reported alongside."""
+    rows = []
+    methods = dict(baselines.RA_METHODS)
+    methods["SROA+"] = _sroa_plus
+    names = list(METHODS) + ["SROA+"]
+    for lam in LAMBDAS:
+        Rs = {m: [] for m in names}
+        for seed in seeds:
+            scn = wireless.draw_scenario(seed)
+            assign = wireless.nearest_edge_assignment(scn)
+            for m in names:
+                ra, _ = timed(methods[m], scn, assign, lam)
+                Rs[m].append(float(evaluate(scn, assign, ra.b, ra.f, ra.p,
+                                            lam).R))
+        for m in names:
+            rows.append(row(f"fig3/lam={lam:g}/{m}", 0.0,
+                            f"R={np.mean(Rs[m]):.1f}"))
+        winner = min(METHODS, key=lambda m: np.mean(Rs[m]))
+        rows.append(row(f"fig3/lam={lam:g}/winner", 0.0, winner))
+        winner_p = min(names, key=lambda m: np.mean(Rs[m]))
+        rows.append(row(f"fig3/lam={lam:g}/winner_with_plus", 0.0,
+                        winner_p))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,43 @@
+"""Paper Fig 2: objective value (15) per resource-allocation method,
+FDMA and OFDMA schemes.  Validates: SROA achieves the lowest R."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core import baselines, wireless
+from repro.core.system_model import evaluate
+
+SEEDS = (0, 1, 2)
+LAM = 1.0
+
+
+def run(seeds=SEEDS, quiet=False):
+    rows, table = [], {}
+    for scheme in ("fdma", "ofdma"):
+        for name, fn in baselines.RA_METHODS.items():
+            Rs, us_total = [], 0.0
+            for seed in seeds:
+                scn = wireless.draw_scenario(seed)
+                assign = wireless.nearest_edge_assignment(scn)
+                ra, us = timed(fn, scn, assign, LAM)
+                if scheme == "ofdma":
+                    ra = baselines.to_ofdma(scn, ra)
+                Rs.append(float(evaluate(scn, assign, ra.b, ra.f, ra.p,
+                                         LAM).R))
+                us_total += us
+            mean_R = float(np.mean(Rs))
+            table[(scheme, name)] = mean_R
+            rows.append(row(f"fig2/{scheme}/{name}", us_total / len(seeds),
+                            f"R={mean_R:.1f}"))
+    for scheme in ("fdma", "ofdma"):
+        sub = {k[1]: v for k, v in table.items() if k[0] == scheme}
+        best = min(sub, key=sub.get)
+        rows.append(row(f"fig2/{scheme}/winner", 0.0, best))
+        if not quiet:
+            assert best == "SROA", (scheme, sub)
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,61 @@
+"""Paper Figs 4-5: objective value (15) per user-assignment method, each
+paired with the RA its own paper uses; plus the TSIA transfer trace.
+Also reports the beyond-paper TSIA+ (best-gain init + golden SROA)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core import assignment_baselines as ub
+from repro.core import baselines, sroa, tsia, wireless
+from repro.core.system_model import evaluate
+
+LAM = 1.0
+
+
+def _score_with(ra_fn):
+    def score(scn, a):
+        ra = ra_fn(scn, np.asarray(a), LAM)
+        return float(evaluate(scn, np.asarray(a), ra.b, ra.f, ra.p, LAM).R)
+    return score
+
+
+def run(seeds=(0, 1), trace=False, hfel_iters=(40, 80)):
+    rows = []
+    for seed in seeds:
+        scn = wireless.draw_scenario(seed)
+
+        res, us = timed(tsia.solve, scn, LAM)
+        rows.append(row(f"fig4/seed{seed}/TSIA", us,
+                        f"R={res.R:.1f};iters={res.history.total_iters}"))
+
+        score_h = _score_with(baselines.hfel_ra)
+        a_h, us_h = timed(ub.hfel_ua, scn, LAM,
+                          lambda a: score_h(scn, a), seed=seed,
+                          transfer_iters=hfel_iters[0],
+                          exchange_iters=hfel_iters[1])
+        rows.append(row(f"fig4/seed{seed}/HFEL-UA", us_h,
+                        f"R={score_h(scn, a_h):.1f};"
+                        f"iters={sum(hfel_iters)}"))
+
+        a_j = ub.juara_ua(scn, LAM, None)
+        score_j = _score_with(baselines.juara_ra)
+        rows.append(row(f"fig4/seed{seed}/JUARA-UA", 0.0,
+                        f"R={score_j(scn, a_j):.1f};iters=100"))
+
+        # beyond-paper extension
+        init = ub.bestgain_ua(scn, LAM, None)
+        plus = tsia.solve(scn, LAM, init_assign=init,
+                          cfg=sroa.SroaConfig(refine_iters=32))
+        rows.append(row(f"fig4/seed{seed}/TSIA+(ours)", 0.0,
+                        f"R={plus.R:.1f};iters={plus.history.total_iters}"))
+
+        if trace and seed == seeds[0]:
+            for stage, q, user, src, dst in res.history.moves[:20]:
+                rows.append(row(f"fig5/move{q}/stage{stage}", 0.0,
+                                f"user{user}:{src}->{dst}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run(trace=True)))

@@ -1,0 +1,78 @@
+"""Roofline table from the dry-run records (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh): compute / memory / collective terms in seconds,
+the dominant term, MODEL_FLOPS / executed-FLOPs ratio, and a one-line
+bottleneck note.  Source: results/dryrun/*.json produced by
+``python -m repro.launch.dryrun``.
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+NOTE = {
+    "compute": "compute-bound: more chips or lower arithmetic (e.g. no-remat"
+               " / selective remat) moves it",
+    "memory": "HBM-bound: fuse/avoid re-reads, smaller optimizer state,"
+              " bf16 state",
+    "collective": "ICI-bound: shrink per-layer collectives (bf16 comms,"
+                  " fewer reshards, overlap with compute)",
+}
+
+
+def load(tag: str = "baseline", mesh: str = "singlepod"):
+    recs = []
+    for f in sorted(glob.glob(str(RESULTS / f"*__{mesh}__{tag}.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def rows(tag: str = "baseline", mesh: str = "singlepod"):
+    out = []
+    for r in load(tag, mesh):
+        name = f"roofline/{r['arch']}/{r['shape']}/{mesh}"
+        if r["status"] != "ok":
+            out.append((name, r["status"], r.get("reason", r.get("error",
+                                                                 ""))[:60]))
+            continue
+        t = r["roofline"]
+        terms = {"compute": t["compute_term_s"],
+                 "memory": t["memory_term_s"],
+                 "collective": t["collective_term_s"]}
+        dom = max(terms, key=terms.get)
+        ratio = t["flops_model_global"] / max(t["flops_executed_global"], 1)
+        total = sum(terms.values())
+        frac = terms[dom] / max(total, 1e-12)
+        out.append((name, "ok", {
+            "compute_s": round(terms["compute"], 4),
+            "memory_s": round(terms["memory"], 4),
+            "collective_s": round(terms["collective"], 4),
+            "dominant": dom,
+            "dom_frac": round(frac, 3),
+            "useful_flops_ratio": round(ratio, 3),
+            "temp_bytes_per_dev": (r.get("memory") or {}).get(
+                "temp_size_in_bytes"),
+        }))
+    return out
+
+
+def run(tag: str = "baseline"):
+    lines = []
+    for mesh in ("singlepod", "multipod"):
+        for name, status, info in rows(tag, mesh):
+            if status != "ok":
+                lines.append(f"{name},0.0,{status}:{info}")
+            else:
+                lines.append(
+                    f"{name},0.0,dom={info['dominant']}"
+                    f";c={info['compute_s']};m={info['memory_s']}"
+                    f";coll={info['collective_s']}"
+                    f";useful={info['useful_flops_ratio']}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

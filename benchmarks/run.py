@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  fig2  — SROA vs RA baselines (FDMA/OFDMA)        [bench_sroa]
+  fig3  — lambda sweep SROA/HFEL/FEDL              [bench_lambda]
+  fig4/5 — TSIA vs UA baselines + move trace       [bench_tsia]
+  fig6  — TSIA convergence vs N, M                 [bench_convergence]
+  fig7/8 — HFL vs FL accuracy + objective          [bench_hfl_vs_fl]
+  roofline — per-cell terms from the dry-run       [roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: sroa,lambda,tsia,convergence,"
+                         "hfl_vs_fl,roofline")
+    args = ap.parse_args()
+    from benchmarks import (bench_convergence, bench_hfl_vs_fl, bench_lambda,
+                            bench_sroa, bench_tsia, roofline)
+    suites = {
+        "sroa": bench_sroa.run,
+        "lambda": bench_lambda.run,
+        "tsia": lambda: bench_tsia.run(trace=True),
+        "convergence": bench_convergence.run,
+        "hfl_vs_fl": bench_hfl_vs_fl.run,
+        "roofline": roofline.run,
+    }
+    wanted = args.only.split(",") if args.only else list(suites)
+    print("name,us_per_call,derived")
+    failed = False
+    for name in wanted:
+        try:
+            for line in suites[name]():
+                print(line, flush=True)
+        except Exception:   # noqa: BLE001 — report and continue
+            failed = True
+            print(f"{name},0.0,SUITE-ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""End-to-end HFL: plan (TSIA+SROA) -> train (Algorithm 1) -> report.
+
+    PYTHONPATH=src python examples/hfl_fashionmnist.py
+"""
+from repro.launch.train import main
+
+main(["--dataset", "fashionmnist", "--iters", "6", "--users", "20",
+      "--edges", "4", "--ckpt-dir", "out/quickstart_ckpt"])

@@ -1,0 +1,38 @@
+"""Quickstart: plan an HFL deployment with SROA + TSIA (the paper's core).
+
+Draws the paper's wireless scenario (50 users, 5 edges), runs the two-stage
+assignment + spectrum optimization, and prints the plan vs baselines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import baselines, sroa, tsia, wireless
+from repro.core.system_model import evaluate
+
+scn = wireless.draw_scenario(seed=0)
+print(f"scenario: N={scn.N} users, M={scn.M} edges, "
+      f"B={float(scn.B_total)/1e6:.2f} MHz total bandwidth")
+
+# --- resource allocation on the geographic assignment (paper Fig 2) ----
+assign = wireless.nearest_edge_assignment(scn)
+print("\nresource allocation (objective R = E_sum + T_sum, lambda=1):")
+for name, fn in baselines.RA_METHODS.items():
+    ra = fn(scn, assign, 1.0)
+    cb = evaluate(scn, assign, ra.b, ra.f, ra.p, 1.0)
+    print(f"  {name:6s} R={float(cb.R):10.1f}  "
+          f"E={float(cb.E_sum):9.1f} J  T={float(cb.T_sum):8.1f} s")
+
+# --- user assignment (paper Fig 4) --------------------------------------
+plan = tsia.solve(scn, lam=1.0)
+print(f"\nTSIA plan: R={plan.R:.1f} after "
+      f"{plan.history.total_iters} assigning iterations")
+print("users per edge:", np.bincount(plan.assign, minlength=scn.M))
+
+# --- beyond-paper: TSIA+ (best-gain init + golden-refined SROA) ---------
+import jax.numpy as jnp
+plus = tsia.solve(scn, lam=1.0,
+                  init_assign=np.asarray(jnp.argmax(scn.gain, axis=1)),
+                  cfg=sroa.SroaConfig(refine_iters=32))
+print(f"TSIA+ (ours): R={plus.R:.1f} "
+      f"({100 * (1 - plus.R / plan.R):.1f}% below paper TSIA)")

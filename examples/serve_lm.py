@@ -1,0 +1,8 @@
+"""Serve a (reduced) assigned LM arch with prefill + KV-cache decode.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main
+
+main(["--arch", "qwen1.5-0.5b", "--batch", "4", "--prompt-len", "32",
+      "--new-tokens", "8"])

@@ -1,0 +1,88 @@
+"""Assigned input-shape sets and abstract input specs for every step kind.
+
+LM transformer shapes are seq_len x global_batch.  ``decode_*`` / ``long_*``
+lower ``serve_step`` (one new token against a KV cache of seq_len), NOT
+``train_step``; ``prefill_*`` lowers the full-sequence prefill;
+``long_500k`` requires a sub-quadratic arch (cfg.subquadratic).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def applicable(cfg: tf.ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Whether (arch, shape) is a runnable cell; else the skip reason."""
+    if shape.kind == "decode" and not cfg.has_decode:
+        return False, "encoder-only arch has no decode step"
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "pure full-attention arch; 500k ctx needs sub-quadratic"
+    return True, ""
+
+
+def batch_specs(cfg: tf.ArchConfig, shape: ShapeSpec):
+    """Abstract (ShapeDtypeStruct) inputs for the step of `shape.kind`."""
+    B, T = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        if cfg.input_mode == "tokens":
+            batch = {"tokens": sds((B, T), i32)}
+        elif cfg.input_mode == "embeds":
+            batch = {"embeds": sds((B, T, cfg.d_model), jnp.bfloat16)}
+            if shape.kind == "train":
+                batch["labels"] = sds((B, T), i32)
+        else:  # mixed (VLM): patch prefix + text
+            T_text = T - cfg.n_patches
+            batch = {"tokens": sds((B, T_text), i32),
+                     "patches": sds((B, cfg.n_patches, cfg.d_model),
+                                    jnp.bfloat16)}
+        if shape.kind == "train" and cfg.family == "encoder" \
+                and "labels" not in batch:
+            batch["labels"] = sds((B, T), i32)
+        return batch
+    # decode
+    return {"cache": tf.abstract_cache(cfg, B, T),
+            "tokens": sds((B, 1), i32)}
+
+
+def batch_logical_axes(cfg: tf.ArchConfig, shape: ShapeSpec):
+    """Logical sharding axes mirroring batch_specs."""
+    if shape.kind in ("train", "prefill"):
+        axes = {}
+        if cfg.input_mode == "tokens":
+            axes["tokens"] = ("batch", "seq")
+        elif cfg.input_mode == "embeds":
+            axes["embeds"] = ("batch", "seq", None)
+            if shape.kind == "train":
+                axes["labels"] = ("batch", "seq")
+        else:
+            axes["tokens"] = ("batch", "seq")
+            axes["patches"] = ("batch", None, None)
+        if shape.kind == "train" and cfg.family == "encoder" \
+                and "labels" not in axes:
+            axes["labels"] = ("batch", "seq")
+        return axes
+    return {"cache": tf.cache_logical_axes(cfg),
+            "tokens": ("kv_batch", None)}

@@ -1,0 +1,16 @@
+"""The paper's contribution: HFL cost model + SROA + TSIA (+ baselines)."""
+from repro.core import (assignment_baselines, baselines, sroa, system_model,
+                        tsia, wireless)
+from repro.core.sroa import (SroaConfig, SroaResult, solve as sroa_solve,
+                             solve_plus as sroa_solve_plus)
+from repro.core.system_model import evaluate, objective, sroa_constants
+from repro.core.tsia import TsiaResult, solve as tsia_solve
+from repro.core.wireless import (Scenario, ScenarioSpec, draw_scenario,
+                                 nearest_edge_assignment)
+
+__all__ = [
+    "assignment_baselines", "baselines", "sroa", "system_model", "tsia",
+    "wireless", "SroaConfig", "SroaResult", "sroa_solve", "sroa_solve_plus",
+    "evaluate", "objective", "sroa_constants", "TsiaResult", "tsia_solve",
+    "Scenario", "ScenarioSpec", "draw_scenario", "nearest_edge_assignment",
+]

@@ -1,0 +1,290 @@
+"""Resource-allocation baselines the paper compares against (Figs 2-3).
+
+Each baseline is re-implemented at the level of detail the paper uses for
+comparison (DESIGN.md D3).  All of them return a full (b, f, p) allocation
+for a given assignment and are scored through
+:func:`repro.core.system_model.evaluate` — the same cost model as SROA — so
+the comparison is apples-to-apples:
+
+* ``naive_equal``  — equal bandwidth split, f_max, p_max (sanity floor).
+* ``jdsra``  [32]  — latency-constrained scheduling: delay-optimal bandwidth
+  (smallest common deadline with sum b <= B), f = f_max, p = p_max.
+  Optimizes delay only; energy is whatever it costs.
+* ``era``    [33]  — energy-efficient radio resource allocation: minimizes
+  energy under a fixed (not optimized) deadline taken from the naive
+  configuration.  Time delay itself is not optimized (the paper's critique).
+* ``fedl``   [34]  — FL over wireless networks: balances energy and delay by
+  optimizing f (closed form) and p (1-D golden search) per user, but with a
+  single-server-style equal bandwidth split (no joint spectrum optimization).
+* ``hfel_ra``[35]  — HFEL's per-edge convex resource allocation: joint (b, f)
+  per edge with p fixed at p_max and the *per-edge* bandwidth budgets B_m
+  (no global pooling — the gap SROA's merged constraint (17a) exploits).
+* ``juara_ra``[39] — bandwidth-only allocation: KKT/inversion bandwidth at a
+  delay target swept downward in fixed steps, f = f_max, p = p_max.
+
+OFDMA variants quantize any method's bandwidth vector onto a subcarrier grid
+(:func:`to_ofdma`), mirroring the paper's Fig 2(b)/3(b) split.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import sroa
+from repro.core.sroa import SroaConfig, algorithm2, algorithm3, invert_rate, rate_fn
+from repro.core.system_model import evaluate, sroa_constants
+from repro.core.wireless import Scenario
+
+_BIG = 1e30
+SUBCARRIER_HZ = 15e3
+
+
+class RaResult(NamedTuple):
+    b: jnp.ndarray
+    f: jnp.ndarray
+    p: jnp.ndarray
+
+
+# --------------------------------------------------------------------------
+def naive_equal(scn: Scenario, assign, lam, cfg: SroaConfig = SroaConfig()):
+    N = scn.N
+    b = jnp.full((N,), scn.B_total / N)
+    return RaResult(b=b, f=scn.f_max, p=scn.p_max)
+
+
+# --------------------------------------------------------------------------
+def jdsra(scn: Scenario, assign, lam, cfg: SroaConfig = SroaConfig()):
+    """Delay-optimal bandwidth at f_max/p_max: bisect the common deadline."""
+    consts = sroa_constants(scn, assign)
+    B = scn.B_total
+    G = scn.p_max * consts.h / scn.N0
+
+    def b_of_t(t):
+        tau = t - consts.delta - consts.J / scn.f_max
+        target = jnp.where(tau > 0, consts.H / jnp.maximum(tau, 1e-30), _BIG)
+        return invert_rate(G, target, B, iters=cfg.b_iters)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        ok = jnp.sum(b_of_t(mid)) <= B
+        return jnp.where(ok, lo, mid), jnp.where(ok, mid, hi)
+
+    lo, hi = lax.fori_loop(0, cfg.t_iters,  body,
+                           (jnp.asarray(cfg.t_low), jnp.asarray(cfg.t_up)))
+    return RaResult(b=b_of_t(hi), f=scn.f_max, p=scn.p_max)
+
+
+# --------------------------------------------------------------------------
+def era(scn: Scenario, assign, lam, cfg: SroaConfig = SroaConfig(),
+        mu_iters: int = 48):
+    """ERA [33]: bandwidth-only energy-efficient allocation.
+
+    Faithful scope (Zeng et al. 2020): CPU frequency and transmit power are
+    *fixed* (f_max, p_max) — ERA only allocates bandwidth, "based on the
+    channel conditions and computation capacities", to minimize transmission
+    energy under a per-round latency budget that is itself not optimized
+    (taken from the naive configuration).  Users with weak channels / slow
+    compute get more bandwidth.  Implemented as marginal-energy water-filling
+    (bisection on the multiplier mu) floored at the deadline-meeting minimum.
+    """
+    consts = sroa_constants(scn, assign)
+    B = scn.B_total
+    naive = naive_equal(scn, assign, lam)
+    t_dl = evaluate(scn, assign, naive.b, naive.f, naive.p, lam).T_sum
+    tau = jnp.maximum(t_dl - consts.delta - consts.J / scn.f_max, 1e-3)
+    G = scn.p_max * consts.h / scn.N0
+    b_min = invert_rate(G, consts.H / tau, B, iters=cfg.b_iters)
+
+    def E_com(b):                          # decreasing convex in b
+        return scn.p_max * consts.H / jnp.maximum(rate_fn(b, G), 1e-30)
+
+    def neg_marginal(b):                   # -dE/db > 0, decreasing in b
+        db = jnp.maximum(b, 1.0) * 1e-4
+        return (E_com(b) - E_com(b + db)) / db
+
+    def b_of_mu(mu):
+        lo = jnp.full_like(G, 1.0)
+        hi = jnp.full_like(G, B)
+
+        def body(_, lohi):
+            lo, hi = lohi
+            mid = 0.5 * (lo + hi)
+            more = neg_marginal(mid) > mu  # still worth more bandwidth
+            return jnp.where(more, mid, lo), jnp.where(more, hi, mid)
+
+        lo, hi = lax.fori_loop(0, cfg.b_iters, body, (lo, hi))
+        return jnp.maximum(0.5 * (lo + hi), b_min)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = jnp.sqrt(lo * hi)            # log-scale bisection on mu
+        over = jnp.sum(b_of_mu(mid)) > B   # too much bandwidth -> raise mu
+        return jnp.where(over, mid, lo), jnp.where(over, hi, mid)
+
+    mu_lo, mu_hi = lax.fori_loop(
+        0, mu_iters, body,
+        (jnp.asarray(1e-20, jnp.float32), jnp.asarray(1e3, jnp.float32)))
+    b = b_of_mu(jnp.sqrt(mu_lo * mu_hi))
+    b = b * jnp.minimum(1.0, B / jnp.maximum(jnp.sum(b), 1.0))
+    return RaResult(b=b, f=scn.f_max, p=scn.p_max)
+
+
+# --------------------------------------------------------------------------
+def fedl(scn: Scenario, assign, lam, cfg: SroaConfig = SroaConfig(),
+         golden_iters: int = 60):
+    """Per-user energy/delay balance with equal bandwidth (single-server FL)."""
+    consts = sroa_constants(scn, assign)
+    N = scn.N
+    b = jnp.full((N,), scn.B_total / N)
+    w = lam / N                       # per-user share of the delay weight
+    # f*: argmin_f A f^2 + w J / f  ->  f* = (w J / (2 A))^(1/3)
+    f_star = (w * consts.J / (2.0 * jnp.maximum(consts.A, 1e-38))) ** (1.0 / 3.0)
+    f = jnp.clip(f_star, 1e6, scn.f_max)
+
+    # p*: argmin_p  (p + w) * H / (b log2(1 + h p / (N0 b)))  via golden search
+    def cost_p(p):
+        r = rate_fn(b, p * consts.h / scn.N0)
+        return (p + w) * consts.H / jnp.maximum(r, 1e-30)
+
+    gr = 0.5 * (np.sqrt(5.0) - 1.0)
+    lo = jnp.full((N,), 1e-6)
+    hi = scn.p_max
+
+    def body(_, lohi):
+        lo, hi = lohi
+        x1 = hi - gr * (hi - lo)
+        x2 = lo + gr * (hi - lo)
+        shrink_hi = cost_p(x1) < cost_p(x2)
+        return (jnp.where(shrink_hi, lo, x1), jnp.where(shrink_hi, x2, hi))
+
+    lo, hi = lax.fori_loop(0, golden_iters, body, (lo, hi))
+    return RaResult(b=b, f=f, p=0.5 * (lo + hi))
+
+
+# --------------------------------------------------------------------------
+from functools import partial as _partial
+
+
+@_partial(jax.jit, static_argnames=("cfg",))
+def _hfel_edge_solve(sub, B_m, f_max, p_max, N0, lam, cfg: SroaConfig):
+    """Per-edge HFEL solve: value-bisect t_m; (b, f) via Algorithm 2 at
+    fixed p = p_max; per-edge budget B_m (no pooling)."""
+
+    def eval_t(t):
+        bb, ff, b_sum = algorithm2(sub, p_max, t, B_m, B_m, f_max, N0, cfg)
+        E = jnp.sum(sub.A * ff ** 2 +
+                    p_max * sub.H /
+                    jnp.maximum(rate_fn(bb, p_max * sub.h / N0), 1e-30))
+        return bb, ff, b_sum, E + lam * t
+
+    def cond(carry):
+        t_lo, t_up, R_star, _, it = carry
+        return jnp.logical_and((t_up - t_lo) / t_up > cfg.eps2,
+                               it < cfg.t_iters)
+
+    def body(carry):
+        t_lo, t_up, R_star, best, it = carry
+        t = 0.5 * (t_lo + t_up)
+        bb, ff, b_sum, R = eval_t(t)
+        infeasible = b_sum > B_m * (1.0 + 1e-3)
+        improved = jnp.logical_and(~infeasible, R <= R_star)
+        t_lo = jnp.where(infeasible | (R > R_star), t, t_lo)
+        t_up = jnp.where(improved, t, t_up)
+        R_star = jnp.where(improved, R, R_star)
+        best = jax.tree.map(lambda new, old: jnp.where(improved, new, old),
+                            (bb, ff), best)
+        return t_lo, t_up, R_star, best, it + 1
+
+    t_up0 = jnp.asarray(cfg.t_up, jnp.float32)
+    b0, f0, _, R0 = eval_t(t_up0)
+    carry = (jnp.asarray(cfg.t_low, jnp.float32), t_up0, R0, (b0, f0), 0)
+    _, _, _, best, _ = lax.while_loop(cond, body, carry)
+    return best
+
+
+def hfel_ra(scn: Scenario, assign, lam, cfg: SroaConfig = SroaConfig()):
+    """HFEL: per-edge joint (b, f) with p = p_max and per-edge budgets B_m."""
+    assign_np = np.asarray(assign)
+    b = np.zeros(scn.N, np.float32)
+    f = np.zeros(scn.N, np.float32)
+    consts = sroa_constants(scn, jnp.asarray(assign_np))
+    for m in range(scn.M):
+        idx = np.flatnonzero(assign_np == m)
+        if idx.size == 0:
+            continue
+        sub = jax.tree.map(lambda a: a[idx] if np.ndim(a) == 1 else a, consts)
+        bb, ff = _hfel_edge_solve(sub, scn.B_edges[m], scn.f_max[idx],
+                                  scn.p_max[idx], scn.N0,
+                                  jnp.asarray(lam, jnp.float32), cfg)
+        b[idx], f[idx] = np.asarray(bb), np.asarray(ff)
+    return RaResult(b=jnp.asarray(b), f=jnp.asarray(f), p=scn.p_max)
+
+
+# --------------------------------------------------------------------------
+def juara_ra(scn: Scenario, assign, lam, cfg: SroaConfig = SroaConfig(),
+             steps: int = 100):
+    """Bandwidth-only: sweep the delay target downward in fixed steps."""
+    consts = sroa_constants(scn, assign)
+    B = scn.B_total
+    G = scn.p_max * consts.h / scn.N0
+    naive = naive_equal(scn, assign, lam)
+    t_hi = evaluate(scn, assign, naive.b, naive.f, naive.p, lam).T_sum
+    # Lower bound: delay-optimal deadline (JDSRA's t*), then fixed-step sweep.
+    ts = jnp.linspace(t_hi, cfg.t_low, steps)
+
+    def score(t):
+        tau = t - consts.delta - consts.J / scn.f_max
+        target = jnp.where(tau > 0, consts.H / jnp.maximum(tau, 1e-30), _BIG)
+        b = invert_rate(G, target, B, iters=cfg.b_iters)
+        feas = jnp.sum(b) <= B
+        E = jnp.sum(consts.A * scn.f_max ** 2 +
+                    scn.p_max * consts.H /
+                    jnp.maximum(rate_fn(b, G), 1e-30)) + consts.E_cloud_total
+        return jnp.where(feas, E + lam * t, _BIG), b
+
+    Rs, bs = jax.vmap(score)(ts)
+    i = jnp.argmin(Rs)
+    return RaResult(b=bs[i], f=scn.f_max, p=scn.p_max)
+
+
+# --------------------------------------------------------------------------
+def sroa_ra(scn: Scenario, assign, lam, cfg: SroaConfig = SroaConfig()):
+    """The paper's SROA, exposed under the common RA interface."""
+    res = sroa.solve(scn, assign, lam, cfg)
+    return RaResult(b=res.b, f=res.f, p=res.p)
+
+
+# --------------------------------------------------------------------------
+def to_ofdma(scn: Scenario, ra: RaResult,
+             subcarrier_hz: float = SUBCARRIER_HZ) -> RaResult:
+    """Quantize a bandwidth vector onto the OFDMA subcarrier grid.
+
+    Floors each b_n to the grid, then hands the freed subcarriers back to the
+    users with the largest fractional remainders (greedy), keeping sum b <= B.
+    """
+    b = np.asarray(ra.b, np.float64)
+    q = np.floor(b / subcarrier_hz)
+    frac = b / subcarrier_hz - q
+    spare = int(np.floor((float(scn.B_total) - q.sum() * subcarrier_hz)
+                         / subcarrier_hz))
+    if spare > 0:
+        order = np.argsort(-frac)
+        q[order[:spare]] += 1.0
+    return RaResult(b=jnp.asarray(q * subcarrier_hz, jnp.float32),
+                    f=ra.f, p=ra.p)
+
+
+RA_METHODS: Dict[str, Callable] = {
+    "SROA": sroa_ra,
+    "FEDL": fedl,
+    "HFEL": hfel_ra,
+    "JDSRA": jdsra,
+    "ERA": era,
+    "JUARA": juara_ra,
+    "naive": naive_equal,
+}

@@ -1,0 +1,127 @@
+"""HFL energy/delay cost model — paper §III eqs (4)-(15), vectorized.
+
+The single source of truth for the objective value: every resource-allocation
+method (SROA and all baselines) is scored through :func:`evaluate` so the
+comparisons in benchmarks/ are apples-to-apples.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.wireless import Scenario
+
+_BIG = 1e30
+
+
+def rate(b: jnp.ndarray, gain: jnp.ndarray, p: jnp.ndarray, N0) -> jnp.ndarray:
+    """Achievable FDMA rate (eq 6): r = b log2(1 + g p / (N0 b)).
+
+    Safe at b == 0 (rate -> 0) and p == 0 (rate -> 0).
+    """
+    b_safe = jnp.maximum(b, 1e-9)
+    snr = gain * p / (N0 * b_safe)
+    return jnp.where(b > 0, b_safe * jnp.log1p(snr) / jnp.log(2.0), 0.0)
+
+
+class CostBreakdown(NamedTuple):
+    T_cmp: jnp.ndarray      # (N,) per-edge-iteration computation delay (eq 4)
+    E_cmp: jnp.ndarray      # (N,) per-edge-iteration computation energy (eq 5)
+    T_com: jnp.ndarray      # (N,) per-edge-iteration upload delay      (eq 7)
+    E_com: jnp.ndarray      # (N,) per-edge-iteration upload energy     (eq 8)
+    T_m: jnp.ndarray        # (M,) per-global-iteration edge delay      (eq 9)
+    E_m: jnp.ndarray        # (M,) per-global-iteration edge energy     (eq 10)
+    T_cloud: jnp.ndarray    # (M,) edge->cloud delay                    (eq 11)
+    E_cloud: jnp.ndarray    # (M,) edge->cloud energy                   (eq 12)
+    R_m: jnp.ndarray        # (M,) per-edge weighted cost               (eq 23)
+    T_sum: jnp.ndarray      # () total delay  (eq 13, x I)
+    E_sum: jnp.ndarray      # () total energy (eq 14, x I)
+    R: jnp.ndarray          # () objective    (eq 15)
+    b_per_edge: jnp.ndarray  # (M,) bandwidth actually used per edge (B_m)
+
+
+def members(assign: jnp.ndarray, M: int) -> jnp.ndarray:
+    """One-hot membership matrix (N, M) from an int assignment vector."""
+    return jax.nn.one_hot(assign, M, dtype=jnp.float32)
+
+
+def evaluate(scn: Scenario, assign: jnp.ndarray, b: jnp.ndarray,
+             f: jnp.ndarray, p: jnp.ndarray, lam) -> CostBreakdown:
+    """Evaluate the full paper cost model for one configuration.
+
+    Args:
+      scn:    wireless scenario.
+      assign: (N,) int32 user -> edge assignment.
+      b:      (N,) Hz bandwidth per user.
+      f:      (N,) Hz CPU frequency per user.
+      p:      (N,) W  transmit power per user.
+      lam:    importance weight lambda in eq (15).
+    """
+    psi = members(assign, scn.M)                       # (N, M)
+    gain_n = jnp.sum(psi * scn.gain, axis=1)           # h_n: gain to own edge
+
+    f_safe = jnp.maximum(f, 1.0)
+    T_cmp = scn.L * scn.c * scn.D / f_safe                         # eq (4)
+    E_cmp = 0.5 * scn.alpha * scn.L * f ** 2 * scn.c * scn.D       # eq (5)
+
+    r = rate(b, gain_n, p, scn.N0)                                  # eq (6)
+    T_com = jnp.where(r > 0, scn.s_bits / jnp.maximum(r, 1e-9), _BIG)  # eq (7)
+    E_com = p * T_com                                               # eq (8)
+
+    per_user = T_cmp + T_com                           # (N,)
+    # eq (9): T_m = K max_{n in N_m} (T_cmp + T_com); empty edge -> 0
+    occupied = psi.sum(axis=0) > 0                     # (M,)
+    T_m = scn.K * jnp.max(jnp.where(psi > 0, per_user[:, None], -_BIG), axis=0)
+    T_m = jnp.where(occupied, T_m, 0.0)
+    # eq (10): E_m = K sum_{n in N_m} (E_cmp + E_com)
+    E_m = scn.K * jnp.sum(psi * (E_cmp + E_com)[:, None], axis=0)
+
+    T_cloud = scn.T_cloud()                            # eq (11)
+    E_cloud = scn.E_cloud()                            # eq (12)
+    # Empty edges do not upload anything to the cloud.
+    T_cloud = jnp.where(occupied, T_cloud, 0.0)
+    E_cloud = jnp.where(occupied, E_cloud, 0.0)
+
+    T = jnp.max(T_cloud + T_m)                         # eq (13)
+    E = jnp.sum(E_cloud + E_m)                         # eq (14)
+    T_sum = scn.I * T
+    E_sum = scn.I * E
+    R = E_sum + lam * T_sum                            # eq (15)
+
+    R_m = scn.I * ((E_cloud + E_m) + lam * (T_cloud + T_m))  # eq (23) x I
+    b_per_edge = jnp.sum(psi * b[:, None], axis=0)
+    return CostBreakdown(T_cmp, E_cmp, T_com, E_com, T_m, E_m,
+                         T_cloud, E_cloud, R_m, T_sum, E_sum, R, b_per_edge)
+
+
+def objective(scn: Scenario, assign, b, f, p, lam) -> jnp.ndarray:
+    return evaluate(scn, assign, b, f, p, lam).R
+
+
+class SroaConstants(NamedTuple):
+    """Per-user constants of problem (17)-(22); eqs (18)-(20)."""
+
+    A: jnp.ndarray       # (N,)  A_n = (alpha/2) I K L c_n D_n
+    J: jnp.ndarray       # (N,)  J_n = I K L c_n D_n
+    H: jnp.ndarray       # ()    H_n = I K s   (same for all users)
+    delta: jnp.ndarray   # (N,)  delta_n = I * T_cloud of own edge
+    h: jnp.ndarray       # (N,)  channel gain to own edge
+    E_cloud_total: jnp.ndarray  # () I * sum_m E_cloud (the omitted constant)
+
+
+def sroa_constants(scn: Scenario, assign: jnp.ndarray) -> SroaConstants:
+    psi = members(assign, scn.M)
+    IKL = scn.I * scn.K * scn.L
+    occupied = psi.sum(axis=0) > 0
+    T_cloud = jnp.where(occupied, scn.T_cloud(), 0.0)
+    E_cloud = jnp.where(occupied, scn.E_cloud(), 0.0)
+    return SroaConstants(
+        A=0.5 * scn.alpha * IKL * scn.c * scn.D,
+        J=IKL * scn.c * scn.D,
+        H=scn.I * scn.K * scn.s_bits,
+        delta=scn.I * jnp.sum(psi * T_cloud[None, :], axis=1),
+        h=jnp.sum(psi * scn.gain, axis=1),
+        E_cloud_total=scn.I * jnp.sum(E_cloud),
+    )

@@ -1,0 +1,150 @@
+"""Wireless scenario model for HFL (paper §III & §VI-A).
+
+Generates the network topology and physical constants the paper uses:
+N mobile users and M edge servers uniformly placed in a 500 m square with
+the cloud at the centre; path loss ``128.1 + 37.6 log10 d(km)`` with 8 dB
+log-normal shadowing; thermal noise N0 = -174 dBm/Hz; per-edge bandwidth
+drawn from [10, 1000] kHz; f_max = 5 GHz; p_max = 23 dBm;
+c_n ~ U[1,10]x1e4 cycles/sample; alpha = 2e-28; L = K = 5; I = 80.
+
+All quantities are SI (Hz, W, s, bits, cycles).  The scenario is a pytree
+of jnp arrays so every downstream solver can be jit'ed over it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+LN2 = float(np.log(2.0))
+
+
+def dbm_to_watt(dbm: float) -> float:
+    return 10.0 ** ((dbm - 30.0) / 10.0)
+
+
+def path_loss_db(d_km: np.ndarray) -> np.ndarray:
+    """Paper path-loss model: 128.1 + 37.6 log10 d(km)."""
+    return 128.1 + 37.6 * np.log10(np.maximum(d_km, 1e-4))
+
+
+class Scenario(NamedTuple):
+    """Immutable wireless HFL scenario (pytree of jnp arrays)."""
+
+    user_pos: jnp.ndarray   # (N, 2) metres
+    edge_pos: jnp.ndarray   # (M, 2) metres
+    gain: jnp.ndarray       # (N, M) linear channel gain user n -> edge m
+    gain_cloud: jnp.ndarray  # (M,) linear gain edge m -> cloud
+    B_edges: jnp.ndarray    # (M,) Hz   per-edge bandwidth budget (draw)
+    B_cloud: jnp.ndarray    # (M,) Hz   edge->cloud bandwidth
+    p_edge: jnp.ndarray     # (M,) W    edge transmit power
+    c: jnp.ndarray          # (N,) cycles / sample
+    D: jnp.ndarray          # (N,) samples in local dataset
+    f_max: jnp.ndarray      # (N,) Hz
+    p_max: jnp.ndarray      # (N,) W
+    s_bits: jnp.ndarray     # () model size in bits
+    alpha: jnp.ndarray      # () effective capacitance (the paper's alpha)
+    N0: jnp.ndarray         # () W/Hz noise PSD
+    L: jnp.ndarray          # () local iterations per edge iteration
+    K: jnp.ndarray          # () edge iterations per global iteration
+    I: jnp.ndarray          # () global iterations
+
+    @property
+    def N(self) -> int:
+        return self.user_pos.shape[0]
+
+    @property
+    def M(self) -> int:
+        return self.edge_pos.shape[0]
+
+    @property
+    def B_total(self) -> jnp.ndarray:
+        """Total bandwidth (constraint 15b merged as in problem (17))."""
+        return jnp.sum(self.B_edges)
+
+    # ---- edge -> cloud terms (eqs 11-12); constants given the topology ----
+    def rate_cloud(self) -> jnp.ndarray:
+        snr = self.gain_cloud * self.p_edge / (self.N0 * self.B_cloud)
+        return self.B_cloud * jnp.log2(1.0 + snr)
+
+    def T_cloud(self) -> jnp.ndarray:      # (M,) seconds per global iteration
+        return self.s_bits / self.rate_cloud()
+
+    def E_cloud(self) -> jnp.ndarray:      # (M,) joules per global iteration
+        return self.p_edge * self.T_cloud()
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """Knobs for drawing a Scenario (defaults = paper §VI-A, ImageNette)."""
+
+    N: int = 50
+    M: int = 5
+    side_m: float = 500.0
+    B_edge_range_hz: tuple = (10e3, 1000e3)
+    shadow_std_db: float = 8.0
+    noise_dbm_per_hz: float = -174.0
+    f_max_hz: float = 5e9
+    p_max_dbm: float = 23.0
+    c_range: tuple = (1e4, 1e5)
+    D_range: tuple = (150, 220)            # ImageNette setting used in Fig 2-6
+    s_bytes: float = 881e3                 # ImageNette model, s = 881 KB
+    alpha: float = 2e-28
+    L: int = 5
+    K: int = 5
+    I: int = 80
+    # Edge->cloud link (paper leaves these implicit; see DESIGN.md D4)
+    B_cloud_hz: float = 1e6
+    p_edge_dbm: float = 27.0
+
+
+def draw_scenario(seed: int, spec: ScenarioSpec = ScenarioSpec()) -> Scenario:
+    """Draw a random scenario per the paper's experimental setup."""
+    rng = np.random.default_rng(seed)
+    side = spec.side_m
+    user_pos = rng.uniform(0.0, side, size=(spec.N, 2))
+    edge_pos = rng.uniform(0.0, side, size=(spec.M, 2))
+    cloud_pos = np.array([side / 2.0, side / 2.0])
+
+    d_ue = np.linalg.norm(user_pos[:, None, :] - edge_pos[None, :, :], axis=-1)
+    d_ec = np.linalg.norm(edge_pos - cloud_pos[None, :], axis=-1)
+
+    pl_ue = path_loss_db(d_ue / 1000.0)
+    pl_ec = path_loss_db(d_ec / 1000.0)
+    shadow_ue = rng.normal(0.0, spec.shadow_std_db, size=pl_ue.shape)
+    shadow_ec = rng.normal(0.0, spec.shadow_std_db, size=pl_ec.shape)
+    gain = 10.0 ** (-(pl_ue + shadow_ue) / 10.0)
+    gain_cloud = 10.0 ** (-(pl_ec + shadow_ec) / 10.0)
+
+    B_edges = rng.uniform(*spec.B_edge_range_hz, size=spec.M)
+    c = rng.uniform(*spec.c_range, size=spec.N)
+    D = rng.uniform(spec.D_range[0], spec.D_range[1], size=spec.N)
+
+    f = jnp.asarray
+    return Scenario(
+        user_pos=f(user_pos, dtype=jnp.float32),
+        edge_pos=f(edge_pos, dtype=jnp.float32),
+        gain=f(gain, dtype=jnp.float32),
+        gain_cloud=f(gain_cloud, dtype=jnp.float32),
+        B_edges=f(B_edges, dtype=jnp.float32),
+        B_cloud=f(np.full(spec.M, spec.B_cloud_hz), dtype=jnp.float32),
+        p_edge=f(np.full(spec.M, dbm_to_watt(spec.p_edge_dbm)), dtype=jnp.float32),
+        c=f(c, dtype=jnp.float32),
+        D=f(D, dtype=jnp.float32),
+        f_max=f(np.full(spec.N, spec.f_max_hz), dtype=jnp.float32),
+        p_max=f(np.full(spec.N, dbm_to_watt(spec.p_max_dbm)), dtype=jnp.float32),
+        s_bits=f(spec.s_bytes * 8.0, dtype=jnp.float32),
+        alpha=f(spec.alpha, dtype=jnp.float32),
+        N0=f(dbm_to_watt(spec.noise_dbm_per_hz), dtype=jnp.float32),
+        L=f(float(spec.L), dtype=jnp.float32),
+        K=f(float(spec.K), dtype=jnp.float32),
+        I=f(float(spec.I), dtype=jnp.float32),
+    )
+
+
+def nearest_edge_assignment(scn: Scenario) -> jnp.ndarray:
+    """Geographical-distance initialization used by TSIA (Alg 5, line 5)."""
+    d = jnp.linalg.norm(scn.user_pos[:, None, :] - scn.edge_pos[None, :, :], axis=-1)
+    return jnp.argmin(d, axis=1).astype(jnp.int32)

@@ -1,0 +1,2 @@
+from repro.data.synthetic import SyntheticImageDataset, make_dataset, token_stream
+from repro.data.partitioner import dirichlet_partition, iid_partition, partition_to_users

@@ -1,0 +1,2 @@
+from repro.fed import compression, hfl, straggler
+from repro.fed.hfl import HflConfig, run_hfl

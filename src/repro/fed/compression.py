@@ -1,0 +1,71 @@
+"""Uplink gradient/update compression: top-k + error feedback, int8.
+
+Mirrors the paper's model-size knob s (eqs 7, 11): compressing the client ->
+edge upload shrinks the effective s, which the wireless cost model then
+rewards with lower T_com/E_com.  ``compressed_bytes`` reports the on-wire
+size so benchmarks can couple compression to the SROA objective.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class TopKState(NamedTuple):
+    error: dict          # per-leaf error-feedback residual
+
+
+def topk_init(params) -> TopKState:
+    return TopKState(error=jax.tree.map(jnp.zeros_like, params))
+
+
+def topk_compress(update, state: TopKState, frac: float = 0.05):
+    """Keep the top `frac` fraction of entries per leaf (error feedback)."""
+
+    def one(u, e):
+        u = u + e
+        flat = u.reshape(-1)
+        k = max(1, int(np.ceil(flat.size * frac)))
+        thresh = jnp.sort(jnp.abs(flat))[-k]
+        mask = (jnp.abs(u) >= thresh).astype(u.dtype)
+        kept = u * mask
+        return kept, u - kept
+
+    leaves, tdef = jax.tree.flatten(update)
+    errs = tdef.flatten_up_to(state.error)
+    out = [one(u, e) for u, e in zip(leaves, errs)]
+    kept = tdef.unflatten([o[0] for o in out])
+    new_state = TopKState(error=tdef.unflatten([o[1] for o in out]))
+    return kept, new_state
+
+
+def int8_quantize(update):
+    """Symmetric per-leaf int8 quantization; returns (q, scales)."""
+
+    def one(u):
+        scale = jnp.maximum(jnp.max(jnp.abs(u)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(u / scale), -127, 127).astype(jnp.int8)
+        return q, scale
+
+    leaves, tdef = jax.tree.flatten(update)
+    qs = [one(u) for u in leaves]
+    return (tdef.unflatten([q[0] for q in qs]),
+            tdef.unflatten([q[1] for q in qs]))
+
+
+def int8_dequantize(q, scales):
+    return jax.tree.map(lambda qi, s: qi.astype(jnp.float32) * s, q, scales)
+
+
+def compressed_bytes(params, *, topk_frac: float | None = None,
+                     int8: bool = False) -> int:
+    """On-wire bytes of one model/update upload under a compression config."""
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    if topk_frac is not None:
+        # value (1B if also int8 else 4B) + index (4B) per kept entry
+        per = (1 if int8 else 4) + 4
+        return int(np.ceil(n * topk_frac)) * per
+    return n * (1 if int8 else 4)

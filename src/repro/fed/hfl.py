@@ -1,0 +1,122 @@
+"""HFL training loop — the paper's Algorithm 1, vmapped over users.
+
+One global iteration = K edge iterations x L local full-batch GD steps
+(eq 1), edge aggregation (eq 2), then cloud aggregation (eq 3).  Traditional
+single-server FL is the M=1, K=1 special case (used by Figs 7-8).
+
+The whole K-loop is one jitted computation; users are a vmapped leading
+axis, edges are one-hot segment reductions — the same structure the
+distributed variant (fed/distributed.py) expresses with shard_map + psum.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed import compression as comp_lib
+from repro.models import cnn
+
+
+@dataclasses.dataclass(frozen=True)
+class HflConfig:
+    L: int = 5                   # local iterations per edge iteration
+    K: int = 5                   # edge iterations per global iteration
+    I: int = 40                  # global iterations
+    lr: float = 0.05
+    topk_frac: Optional[float] = None    # uplink compression
+    int8: bool = False
+    seed: int = 0
+
+
+def broadcast_tree(tree, n):
+    return jax.tree.map(lambda l: jnp.broadcast_to(l, (n,) + l.shape), tree)
+
+
+def weighted_edge_average(user_params, onehot, weights):
+    """eq (2): w_m = sum_{n in m} D_n w_n / D_m  for every edge at once."""
+    wsum = jnp.einsum("n,nm->m", weights, onehot)            # (M,)
+
+    def agg(leaf):  # leaf: (N, ...)
+        num = jnp.einsum("n,nm,n...->m...", weights, onehot, leaf)
+        return num / jnp.maximum(wsum, 1e-9).reshape(
+            (-1,) + (1,) * (leaf.ndim - 1))
+
+    return jax.tree.map(agg, user_params), wsum
+
+
+def cloud_average(edge_params, edge_weight):
+    """eq (3): w = sum_m D_m w_m / D."""
+    tot = jnp.maximum(edge_weight.sum(), 1e-9)
+
+    def agg(leaf):  # (M, ...)
+        return jnp.einsum("m,m...->...", edge_weight, leaf) / tot
+
+    return jax.tree.map(agg, edge_params)
+
+
+@partial(jax.jit, static_argnames=("cnn_cfg", "cfg"))
+def global_iteration(cnn_cfg: cnn.CnnConfig, cfg: HflConfig, w_global,
+                     x_u, y_u, mask_u, sizes, onehot, participate):
+    """One HFL global iteration (Algorithm 1).  participate: (N,) 0/1 mask
+    (straggler dropping / failures); dropped users keep training but are
+    excluded from aggregation weights."""
+    N = x_u.shape[0]
+    weights = sizes * participate
+
+    def local_train(p, xu, yu, mu):
+        def gd(p, _):
+            g = jax.grad(cnn.loss_fn, argnums=1)(cnn_cfg, p, xu, yu, mu)
+            return jax.tree.map(lambda a, b: a - cfg.lr * b, p, g), None
+        p, _ = jax.lax.scan(gd, p, None, length=cfg.L)
+        return p
+
+    def edge_iter(user_params, _):
+        trained = jax.vmap(local_train)(user_params, x_u, y_u, mask_u)
+        edge_params, _ = weighted_edge_average(trained, onehot, weights)
+        # edge broadcasts back to its users (start of next edge iteration)
+        user_params = jax.tree.map(
+            lambda em: jnp.einsum("nm,m...->n...", onehot, em), edge_params)
+        return user_params, None
+
+    user_params = broadcast_tree(w_global, N)
+    user_params, _ = jax.lax.scan(edge_iter, user_params, None, length=cfg.K)
+    edge_params, _ = weighted_edge_average(user_params, onehot, weights)
+    edge_weight = jnp.einsum("n,nm->m", weights, onehot)
+    return cloud_average(edge_params, edge_weight)
+
+
+def run_hfl(cnn_cfg: cnn.CnnConfig, w0, x_u, y_u, mask_u, sizes, assign,
+            cfg: HflConfig, *, x_test=None, y_test=None, M: int | None = None,
+            participate_fn: Callable[[int], np.ndarray] | None = None,
+            eval_every: int = 1, ckpt_manager=None, start_iter: int = 0):
+    """Run I global iterations; returns (w, history dict)."""
+    M = M if M is not None else int(np.max(assign)) + 1
+    onehot = jax.nn.one_hot(jnp.asarray(assign), M, dtype=jnp.float32)
+    sizes = jnp.asarray(sizes, jnp.float32)
+    hist = {"acc": [], "iter": []}
+    w = w0
+    for i in range(start_iter, cfg.I):
+        part = (jnp.asarray(participate_fn(i), jnp.float32)
+                if participate_fn else jnp.ones(x_u.shape[0], jnp.float32))
+        w = global_iteration(cnn_cfg, cfg, w, x_u, y_u, mask_u, sizes,
+                             onehot, part)
+        if x_test is not None and (i % eval_every == 0 or i == cfg.I - 1):
+            acc = float(cnn.accuracy(cnn_cfg, w, x_test, y_test))
+            hist["acc"].append(acc)
+            hist["iter"].append(i)
+        if ckpt_manager is not None:
+            ckpt_manager.save(step=i + 1, tree=w)
+    return w, hist
+
+
+def run_fl(cnn_cfg, w0, x_u, y_u, mask_u, sizes, cfg: HflConfig, **kw):
+    """Traditional FL: one server (M=1), K=1; same code path (Figs 7-8)."""
+    assign = np.zeros(x_u.shape[0], np.int32)
+    fl_cfg = dataclasses.replace(cfg, K=1)
+    return run_hfl(cnn_cfg, w0, x_u, y_u, mask_u, sizes, assign, fl_cfg,
+                   M=1, **kw)

@@ -1,0 +1,69 @@
+"""HFL-for-LM: the paper's Algorithm 1 applied to large-model training.
+
+Mapping (DESIGN.md §2): a pod is an *edge server*, the cross-pod axis is the
+*cloud*.  Each pod keeps its own model replica (params carry a leading pod
+dim, sharded over 'pod') and runs K local optimizer steps — gradient
+collectives span only the intra-pod (data/model) axes.  Every K steps the
+replicas are averaged over 'pod' (eq 3), so cross-pod ICI traffic per
+microbatch is K x smaller than synchronous data parallelism — the paper's
+hierarchy, executed on the TPU fabric (a.k.a. local SGD / DiLoCo).
+
+Used by §Perf cell C to quantify the cross-pod traffic reduction on
+deepseek-67b train_4k (2 x 16 x 16 mesh).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import transformer as tf
+
+
+def make_hfl_lm_train_step(cfg: tf.ArchConfig, optimizer, *, K: int,
+                           shard=tf._identity_shard):
+    """Returns step(params_stacked, opt_state_stacked, batches) where
+    params_stacked leaves have a leading pod dim P and batches leaves are
+    (P, K, ...) — K microbatches per pod per outer step."""
+
+    def local_step(carry, batch):
+        params, opt_state = carry
+
+        def loss(p):
+            return tf.loss_fn(cfg, p, batch, shard=shard)
+
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return (params, opt_state), metrics["ce"]
+
+    def per_pod(params, opt_state, batches_K):
+        (params, opt_state), ces = lax.scan(local_step, (params, opt_state),
+                                            batches_K)
+        return params, opt_state, ces.mean()
+
+    def step(params_stacked, opt_state_stacked, batches):
+        params, opt_state, ce = jax.vmap(per_pod)(
+            params_stacked, opt_state_stacked, batches)
+        # eq (3): cloud aggregation — the ONLY cross-pod collective,
+        # amortized over K local steps.
+        averaged = jax.tree.map(lambda p: jnp.mean(
+            p.astype(jnp.float32), axis=0, keepdims=True).astype(p.dtype),
+            params)
+        P = jax.tree.leaves(params)[0].shape[0]
+        params = jax.tree.map(
+            lambda a, p: jnp.broadcast_to(a, p.shape), averaged, params)
+        return params, opt_state, {"ce": ce.mean()}
+
+    return step
+
+
+def stacked_abstract(cfg: tf.ArchConfig, pods: int):
+    p_abs = tf.abstract_params(cfg)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((pods,) + s.shape, s.dtype), p_abs)
+
+
+def stacked_axes(cfg: tf.ArchConfig):
+    axes = tf.logical_axes(cfg)
+    return jax.tree.map(lambda a: ("hfl_pod",) + a, axes,
+                        is_leaf=lambda x: isinstance(x, tuple))

@@ -1,0 +1,1 @@
+from repro.kernels import flash_attention, ops, ref, rmsnorm, sroa_bisect

@@ -1,0 +1,64 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On the CPU container the kernels run in ``interpret=True`` mode (the kernel
+body executes exactly, without Mosaic lowering); on a real TPU pass
+``interpret=False`` (or rely on the backend default) to get compiled
+kernels.  Model code selects these via ``ArchConfig.attn_impl='pallas'`` and
+``SroaConfig.use_pallas=True``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import sroa_bisect as _sb
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("iters", "interpret"))
+def sroa_invert_rate(G, target, b_max, iters: int = 42,
+                     interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _sb.sroa_bisect_pallas(G, target, b_max, iters=iters,
+                                  interpret=interpret)
+
+
+@partial(jax.jit,
+         static_argnames=("causal", "q_offset", "window", "interpret"))
+def flash_attention(q, k, v, *, causal=True, q_offset=0, window=None,
+                    interpret: bool | None = None):
+    """q/k/v: (B, T, H, hd) [model layout] -> (B, T, H, hd).
+
+    Pads head_dim to a multiple of 128 lanes, transposes to (B, H, T, hd)
+    for the kernel, and undoes both on the way out.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    B, T, H, hd = q.shape
+    pad = (-hd) % 128
+    scale_fix = ((hd + pad) / hd) ** 0.5  # kernel scales by padded hd
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    qt = (q * scale_fix).transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = _fa.flash_attention_pallas(qt, kt, vt, causal=causal,
+                                     q_offset=q_offset, window=window,
+                                     interpret=interpret)
+    out = out.transpose(0, 2, 1, 3)
+    return out[..., :hd]
+
+
+@partial(jax.jit, static_argnames=("eps", "interpret"))
+def fused_rmsnorm(x, scale, eps: float = 1e-6,
+                  interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _rn.rmsnorm_pallas(x, scale, eps=eps, interpret=interpret)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LN2 = float(np.log(2.0))
+
+
+def invert_rate_ref(G, target, b_max, iters: int = 42):
+    """Oracle for kernels/sroa_bisect.py (same as core.sroa.invert_rate)."""
+    from repro.core.sroa import invert_rate
+    return invert_rate(G, target, b_max, iters=iters)
+
+
+def attention_ref(q, k, v, *, causal=True, q_offset=0, window=None):
+    """Oracle for kernels/flash_attention.py. q/k/v: (B, H, T, hd)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    Tq, Tk = q.shape[2], k.shape[2]
+    qpos = q_offset + jnp.arange(Tq)[:, None]
+    kpos = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps) *
+            scale.astype(jnp.float32)).astype(x.dtype)

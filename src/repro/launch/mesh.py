@@ -1,0 +1,24 @@
+"""Production mesh definitions (single-pod 16x16, multi-pod 2x16x16).
+
+``make_production_mesh`` is a *function* so importing this module never
+touches jax device state (jax locks the device count at first init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_device_count(multi_pod: bool = False) -> int:
+    return 512 if multi_pod else 256
+
+
+# TPU v5e hardware constants used by the roofline analysis (per chip).
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link

@@ -1,0 +1,75 @@
+"""Batched LM serving driver: prefill + decode with a KV/state cache.
+
+Demonstrates the serve path end-to-end on CPU with a reduced config of any
+assigned arch (the full configs are exercised by the dry-run):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+      --batch 4 --prompt-len 32 --new-tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import transformer as tf
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b",
+                    choices=list(configs.ARCHS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--full-size", action="store_true",
+                    help="use the full config (TPU-scale; default reduced)")
+    args = ap.parse_args(argv)
+
+    cfg = configs.get(args.arch)
+    if not cfg.has_decode:
+        raise SystemExit(f"{args.arch} is encoder-only (no decode)")
+    if not args.full_size:
+        cfg = cfg.reduced()
+    print(f"[serve] arch={args.arch} family={cfg.family} "
+          f"layers={cfg.n_layers} d={cfg.d_model}")
+
+    key = jax.random.PRNGKey(args.seed)
+    params = tf.init_params(cfg, key)
+    B, T = args.batch, args.prompt_len
+    prompts = jax.random.randint(key, (B, T), 0, cfg.vocab)
+
+    prefill = jax.jit(tf.make_prefill_step(cfg))
+    serve = jax.jit(tf.make_serve_step(cfg))
+
+    t0 = time.time()
+    logits, cache = prefill(params, {"tokens": prompts})
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+    print(f"[prefill] {B}x{T} tokens in {t_prefill:.2f}s "
+          f"(incl. compile)")
+
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    out_tokens = [np.asarray(tok)]
+    t0 = time.time()
+    for i in range(args.new_tokens):
+        logits, cache = serve(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        out_tokens.append(np.asarray(tok))
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    tps = args.new_tokens * B / dt
+    gen = np.concatenate(out_tokens, 1)
+    print(f"[decode] {args.new_tokens} steps x batch {B} in {dt:.2f}s "
+          f"-> {tps:.1f} tok/s (CPU, incl. compile)")
+    print(f"[sample] first sequence: {gen[0][:16].tolist()}")
+    return {"tok_per_s": tps, "prefill_s": t_prefill}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.models import layers, moe, ssm, transformer
+from repro.models.transformer import (ArchConfig, abstract_cache,
+                                      abstract_params, cache_logical_axes,
+                                      decode_step, forward, init_cache,
+                                      init_params, logical_axes, loss_fn,
+                                      make_prefill_step, make_serve_step,
+                                      make_train_step, param_defs)

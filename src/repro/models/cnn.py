@@ -1,0 +1,96 @@
+"""The paper's three HFL CNNs (§VI-A) in pure JAX.
+
+* FashionMNIST: 2x conv5x5 (10, 12 ch) + 2x2 maxpool + linear head.
+* CIFAR-10:     2x conv5x5 (10, 20 ch) + 2x2 maxpool + 2 linear layers.
+* ImageNette:   2x conv5x5 (15, 28 ch) + 2x2 maxpool + linear(300) + linear(10).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class CnnConfig:
+    name: str
+    in_shape: Tuple[int, int, int]      # (H, W, C)
+    conv_channels: Tuple[int, ...]
+    hidden: Tuple[int, ...]             # linear hidden dims ((): direct head)
+    n_classes: int = 10
+
+
+PAPER_CNNS = {
+    "fashionmnist": CnnConfig("fashionmnist", (28, 28, 1), (10, 12), ()),
+    "cifar10": CnnConfig("cifar10", (32, 32, 3), (10, 20), (100,)),
+    "imagenette": CnnConfig("imagenette", (32, 32, 3), (15, 28), (300,)),
+}
+
+
+def _out_hw(h: int, n_convs: int) -> int:
+    for _ in range(n_convs):
+        h = (h - 4) // 2                # valid conv5 then 2x2 maxpool
+    return h
+
+
+def init_params(cfg: CnnConfig, key):
+    params = {}
+    c_in = cfg.in_shape[2]
+    ks = jax.random.split(key, len(cfg.conv_channels) + len(cfg.hidden) + 1)
+    ki = 0
+    for i, c_out in enumerate(cfg.conv_channels):
+        w = jax.random.normal(ks[ki], (5, 5, c_in, c_out)) / np.sqrt(
+            25 * c_in)
+        params[f"conv{i}"] = {"w": w, "b": jnp.zeros((c_out,))}
+        c_in = c_out
+        ki += 1
+    hw = _out_hw(cfg.in_shape[0], len(cfg.conv_channels))
+    dim = hw * hw * c_in
+    for i, h in enumerate(cfg.hidden):
+        params[f"fc{i}"] = {
+            "w": jax.random.normal(ks[ki], (dim, h)) / np.sqrt(dim),
+            "b": jnp.zeros((h,))}
+        dim = h
+        ki += 1
+    params["head"] = {
+        "w": jax.random.normal(ks[ki], (dim, cfg.n_classes)) / np.sqrt(dim),
+        "b": jnp.zeros((cfg.n_classes,))}
+    return params
+
+
+def param_bytes(cfg: CnnConfig) -> int:
+    p = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    return sum(int(np.prod(l.shape)) * 4 for l in jax.tree.leaves(p))
+
+
+def forward(cfg: CnnConfig, params, x):
+    """x: (B, H, W, C) float32 -> logits (B, n_classes)."""
+    for i in range(len(cfg.conv_channels)):
+        w, b = params[f"conv{i}"]["w"], params[f"conv{i}"]["b"]
+        x = lax.conv_general_dilated(
+            x, w, window_strides=(1, 1), padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + b
+        x = jax.nn.relu(x)
+        x = lax.reduce_window(x, -jnp.inf, lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    x = x.reshape(x.shape[0], -1)
+    for i in range(len(cfg.hidden)):
+        x = jax.nn.relu(x @ params[f"fc{i}"]["w"] + params[f"fc{i}"]["b"])
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+def loss_fn(cfg: CnnConfig, params, x, y, mask=None):
+    logits = forward(cfg, params, x)
+    logp = jax.nn.log_softmax(logits)
+    ce = -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+    if mask is not None:
+        return jnp.sum(ce * mask) / jnp.maximum(mask.sum(), 1.0)
+    return ce.mean()
+
+
+def accuracy(cfg: CnnConfig, params, x, y):
+    return jnp.mean(jnp.argmax(forward(cfg, params, x), -1) == y)

@@ -1,0 +1,148 @@
+"""Core transformer layers — pure JAX, pytree params, shard-friendly.
+
+Conventions:
+* Every layer is a pair ``(init(key, cfg) -> params, apply(params, x) -> y)``
+  expressed as plain functions; params are dicts of jnp arrays.
+* Repeated layers are *stacked* along a leading axis and consumed with
+  ``lax.scan`` so the HLO stays compact at any depth.
+* Attention defaults to a memory-bounded chunked implementation (online
+  softmax over key blocks) so long sequences never materialize (T, T)
+  score matrices; a Pallas flash kernel can be swapped in on real TPUs via
+  ``attn_impl='pallas'``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+# ---------------------------------------------------------------- numerics
+NEG_INF = -1e30
+
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * scale + bias
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., T, H, hd); positions: (..., T)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), x.dtype)          # (hd/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,T,1,hd/2)
+    cos, sin = jnp.cos(ang).astype(x.dtype), jnp.sin(ang).astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+# -------------------------------------------------------------- attention
+def _dense_attention(q, k, v, *, causal: bool, q_offset, window: int | None):
+    """q: (B, Tq, H, hd), k/v: (B, Tk, H, hd). Materializes scores."""
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    Tq, Tk = q.shape[1], k.shape[1]
+    qpos = q_offset + jnp.arange(Tq)[:, None]
+    kpos = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def _chunked_attention(q, k, v, *, causal: bool, q_offset, window: int | None,
+                       kv_chunk: int = 1024):
+    """Flash-style online softmax over key chunks; O(Tq * kv_chunk) memory."""
+    B, Tq, H, hd = q.shape
+    Tk = k.shape[1]
+    n_chunks = max(1, (Tk + kv_chunk - 1) // kv_chunk)
+    pad = n_chunks * kv_chunk - Tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, kv_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, kv_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    scale = hd ** -0.5
+    qpos = q_offset + jnp.arange(Tq)[:, None]
+
+    def step(carry, ckv):
+        (acc, m, denom), (ci, kci, vci) = carry, ckv
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kci) * scale       # (B,H,Tq,C)
+        kpos = ci * kv_chunk + jnp.arange(kv_chunk)[None, :]
+        mask = kpos < Tk
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask[None, None], s.astype(jnp.float32), NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        pexp = jnp.exp(s - m_new[..., None])
+        denom = denom * alpha + pexp.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", pexp.astype(q.dtype), vci).astype(jnp.float32)
+        return (acc, m_new, denom), None
+
+    acc0 = jnp.zeros((B, H, Tq, hd), jnp.float32)
+    m0 = jnp.full((B, H, Tq), NEG_INF, jnp.float32)
+    d0 = jnp.zeros((B, H, Tq), jnp.float32)
+    idx = jnp.arange(n_chunks)
+    (acc, m, denom), _ = lax.scan(step, (acc0, m0, d0), (idx, kc, vc))
+    out = acc / jnp.maximum(denom[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)             # (B,Tq,H,hd)
+
+
+def attention(q, k, v, *, causal=True, q_offset=0, window=None,
+              impl="chunked", kv_chunk=1024):
+    """GQA-ready attention. k/v may have fewer heads; repeats to match q."""
+    Hq, Hkv = q.shape[2], k.shape[2]
+    if Hq != Hkv:
+        rep = Hq // Hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    if impl == "dense":
+        return _dense_attention(q, k, v, causal=causal, q_offset=q_offset,
+                                window=window)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal,
+                                    q_offset=q_offset, window=window)
+    return _chunked_attention(q, k, v, causal=causal, q_offset=q_offset,
+                              window=window, kv_chunk=kv_chunk)
+
+
+# ----------------------------------------------------------------- blocks
+def init_dense(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def linear(x, w, b=None):
+    y = x @ w
+    return y + b if b is not None else y
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out):
+    return linear(jax.nn.gelu(linear(x, w_in, b_in)), w_out, b_out)

@@ -1,0 +1,207 @@
+"""State-space / recurrent blocks: Mamba2 (zamba2) and xLSTM (mLSTM, sLSTM).
+
+All blocks expose a training form (scan over time, carrying the recurrent
+state) and a single-step decode form operating on an explicit state pytree —
+constant memory in sequence length, which is what makes the ``long_500k``
+cells runnable for these families (DESIGN.md §6).
+
+The time scan is the paper-faithful *baseline*; the chunked block-parallel
+SSD formulation is a §Perf hillclimb item (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models.layers import init_dense
+
+CONV_W = 4  # causal depthwise conv width used by Mamba2
+
+
+# =========================================================== Mamba2 (SSD)
+def mamba2_dims(d_model: int, d_state: int, headdim: int = 64, expand: int = 2):
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    return d_inner, n_heads
+
+
+def init_mamba2(key, d_model, d_state, headdim=64, expand=2,
+                dtype=jnp.float32):
+    d_inner, n_heads = mamba2_dims(d_model, d_state, headdim, expand)
+    # in_proj -> [z (d_inner), x (d_inner), B (d_state), C (d_state), dt (H)]
+    d_in_proj = 2 * d_inner + 2 * d_state + n_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": init_dense(ks[0], (d_model, d_in_proj), dtype=dtype),
+        "conv_w": init_dense(ks[1], (CONV_W, d_inner + 2 * d_state),
+                             scale=0.5, dtype=dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "out_proj": init_dense(ks[2], (d_inner, d_model), dtype=dtype),
+    }
+
+
+def _mamba2_split(cfg_dims, proj):
+    d_inner, d_state, n_heads = cfg_dims
+    z = proj[..., :d_inner]
+    x = proj[..., d_inner:2 * d_inner]
+    Bmat = proj[..., 2 * d_inner:2 * d_inner + d_state]
+    Cmat = proj[..., 2 * d_inner + d_state:2 * d_inner + 2 * d_state]
+    dt = proj[..., 2 * d_inner + 2 * d_state:]
+    return z, x, Bmat, Cmat, dt
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x: (B, T, C); w: (W, C). Returns y, new_state."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros(x.shape[:1] + (W - 1,) + x.shape[2:], x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)                     # (B, T+W-1, C)
+    idx = jnp.arange(x.shape[1])[:, None] + jnp.arange(W)[None, :]
+    windows = xp[:, idx]                                         # (B, T, W, C)
+    y = jnp.einsum("btwc,wc->btc", windows, w.astype(x.dtype))
+    return jax.nn.silu(y), xp[:, -(W - 1):]
+
+
+def mamba2_scan(params, x, d_state, headdim=64, state=None, conv_state=None):
+    """x: (B, T, d_model) -> (B, T, d_model), carrying (ssm, conv) state."""
+    B_, T, d_model = x.shape
+    d_inner = params["out_proj"].shape[0]
+    n_heads = d_inner // headdim
+    dims = (d_inner, d_state, n_heads)
+
+    proj = x @ params["in_proj"]
+    z, xin, Bm, Cm, dt = _mamba2_split(dims, proj)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, params["conv_w"], conv_state)
+    xin = conv_out[..., :d_inner]
+    Bm = conv_out[..., d_inner:d_inner + d_state]
+    Cm = conv_out[..., d_inner + d_state:]
+
+    A = -jnp.exp(params["A_log"])                                # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"])                      # (B,T,H)
+    xh = xin.reshape(B_, T, n_heads, headdim)
+
+    if state is None:
+        state = jnp.zeros((B_, n_heads, d_state, headdim), jnp.float32)
+
+    def step(s, inp):
+        xt, Bt, Ct, dtt = inp        # (B,H,hd) (B,ds) (B,ds) (B,H)
+        decay = jnp.exp(dtt * A)                                 # (B,H)
+        upd = jnp.einsum("bs,bh,bhd->bhsd", Bt.astype(jnp.float32),
+                         dtt, xt.astype(jnp.float32))
+        s = s * decay[..., None, None] + upd
+        y = jnp.einsum("bs,bhsd->bhd", Ct.astype(jnp.float32), s)
+        return s, y
+
+    xs = (xh.transpose(1, 0, 2, 3), Bm.transpose(1, 0, 2),
+          Cm.transpose(1, 0, 2), dt.transpose(1, 0, 2))
+    state, ys = lax.scan(step, state, xs)
+    y = ys.transpose(1, 0, 2, 3)                                 # (B,T,H,hd)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = (y.reshape(B_, T, d_inner) * jax.nn.silu(z.astype(jnp.float32))
+         ).astype(x.dtype)
+    return y @ params["out_proj"], (state, conv_state)
+
+
+# ============================================================== xLSTM
+def init_mlstm(key, d_model, n_heads, dtype=jnp.float32):
+    hd = d_model // n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": init_dense(ks[0], (d_model, d_model), dtype=dtype),
+        "wk": init_dense(ks[1], (d_model, d_model), dtype=dtype),
+        "wv": init_dense(ks[2], (d_model, d_model), dtype=dtype),
+        "wi": init_dense(ks[3], (d_model, n_heads), dtype=dtype),
+        "wf": init_dense(ks[4], (d_model, n_heads), dtype=dtype),
+        "wo": init_dense(ks[5], (d_model, d_model), dtype=dtype),
+    }
+
+
+def mlstm_scan(params, x, n_heads, state=None):
+    """Matrix-memory LSTM (xLSTM mLSTM) with exp-gate stabilization."""
+    B, T, d = x.shape
+    hd = d // n_heads
+    q = (x @ params["wq"]).reshape(B, T, n_heads, hd) * hd ** -0.5
+    k = (x @ params["wk"]).reshape(B, T, n_heads, hd) * hd ** -0.5
+    v = (x @ params["wv"]).reshape(B, T, n_heads, hd)
+    log_i = (x @ params["wi"]).astype(jnp.float32)               # (B,T,H)
+    log_f = jax.nn.log_sigmoid((x @ params["wf"]).astype(jnp.float32))
+
+    if state is None:
+        C0 = jnp.zeros((B, n_heads, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, n_heads, hd), jnp.float32)
+        m0 = jnp.full((B, n_heads), -1e30, jnp.float32)
+        state = (C0, n0, m0)
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, li, lf = inp
+        m_new = jnp.maximum(lf + m, li)                          # (B,H)
+        f_ = jnp.exp(lf + m - m_new)
+        i_ = jnp.exp(li - m_new)
+        kf, vf = kt.astype(jnp.float32), vt.astype(jnp.float32)
+        C = C * f_[..., None, None] + i_[..., None, None] * \
+            jnp.einsum("bhk,bhv->bhkv", kf, vf)
+        n = n * f_[..., None] + i_[..., None] * kf
+        qf = qt.astype(jnp.float32)
+        num = jnp.einsum("bhk,bhkv->bhv", qf, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n)), 1.0)
+        return (C, n, m_new), num / den[..., None]
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), log_i.transpose(1, 0, 2),
+          log_f.transpose(1, 0, 2))
+    state, ys = lax.scan(step, state, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, T, d).astype(x.dtype)
+    return y @ params["wo"], state
+
+
+def init_slstm(key, d_model, n_heads, dtype=jnp.float32):
+    hd = d_model // n_heads
+    ks = jax.random.split(key, 9)
+    mk = lambda i: init_dense(ks[i], (d_model, d_model), dtype=dtype)
+    rk = lambda i: init_dense(ks[i], (n_heads, hd, hd), dtype=dtype)
+    return {"wz": mk(0), "wi": mk(1), "wf": mk(2), "wo": mk(3),
+            "rz": rk(4), "ri": rk(5), "rf": rk(6), "ro": rk(7),
+            "w_out": init_dense(ks[8], (d_model, d_model), dtype=dtype)}
+
+
+def slstm_scan(params, x, n_heads, state=None):
+    """Scalar-memory LSTM with exponential gating + per-head recurrence."""
+    B, T, d = x.shape
+    hd = d // n_heads
+    zx = (x @ params["wz"]).reshape(B, T, n_heads, hd).astype(jnp.float32)
+    ix = (x @ params["wi"]).reshape(B, T, n_heads, hd).astype(jnp.float32)
+    fx = (x @ params["wf"]).reshape(B, T, n_heads, hd).astype(jnp.float32)
+    ox = (x @ params["wo"]).reshape(B, T, n_heads, hd).astype(jnp.float32)
+
+    if state is None:
+        zeros = jnp.zeros((B, n_heads, hd), jnp.float32)
+        state = (zeros, zeros, jnp.full((B, n_heads, hd), -1e30), zeros)
+
+    R = {k: params[k].astype(jnp.float32) for k in ("rz", "ri", "rf", "ro")}
+
+    def step(carry, inp):
+        c, n, m, h = carry
+        zt, it, ft, ot = inp
+        rec = lambda r: jnp.einsum("bhd,hde->bhe", h, r)
+        z = jnp.tanh(zt + rec(R["rz"]))
+        li = it + rec(R["ri"])
+        lf = jax.nn.log_sigmoid(ft + rec(R["rf"]))
+        o = jax.nn.sigmoid(ot + rec(R["ro"]))
+        m_new = jnp.maximum(lf + m, li)
+        c = c * jnp.exp(lf + m - m_new) + jnp.exp(li - m_new) * z
+        n = n * jnp.exp(lf + m - m_new) + jnp.exp(li - m_new)
+        h = o * c / jnp.maximum(jnp.abs(n), 1.0)
+        return (c, n, m_new, h), h
+
+    xs = (zx.transpose(1, 0, 2, 3), ix.transpose(1, 0, 2, 3),
+          fx.transpose(1, 0, 2, 3), ox.transpose(1, 0, 2, 3))
+    state, ys = lax.scan(step, state, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, T, d).astype(x.dtype)
+    return y @ params["w_out"], state

@@ -1,0 +1,795 @@
+"""Unified architecture zoo: dense / MoE / Mamba-hybrid / xLSTM / encoder.
+
+One ``ArchConfig`` describes every assigned architecture; ``param_defs``
+is the single source of truth for parameter shapes *and* logical sharding
+axes, from which we derive real initializers (smoke tests), abstract
+ShapeDtypeStructs (dry-run lowering) and PartitionSpecs (pjit shardings).
+
+All layer stacks scan over a stacked leading axis (compact HLO, fast AOT
+compile); training blocks are wrapped in ``jax.checkpoint`` (remat).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (apply_rope, attention, gelu_mlp, layer_norm,
+                                 rms_norm, swiglu)
+
+# ============================================================== config
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                    # dense | moe | mamba_hybrid | xlstm | encoder
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    moe_dispatch_groups: int = 1   # >1: device-local dispatch (§Perf cell A)
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    attn_every: int = 6            # hybrid: shared attn applied every k layers
+    window: Optional[int] = None   # sliding window for hybrid attention
+    # modality frontends (audio/vlm): inputs are precomputed embeddings
+    input_mode: str = "tokens"     # tokens | embeds | mixed
+    n_patches: int = 256           # 'mixed': prefix patch embeddings
+    causal: bool = True
+    has_decode: bool = True
+    subquadratic: bool = False     # may run the long_500k cell
+    rope_theta: float = 10000.0
+    dtype: Any = jnp.bfloat16
+    attn_impl: str = "chunked"
+    kv_chunk: int = 1024
+    remat: bool = True
+    optimizer: str = "adamw"
+    # bookkeeping
+    source: str = ""
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def reduced(self, n_layers=2, d_model=128, n_heads=4, n_kv_heads=None,
+                d_ff=256, vocab=512, n_experts=None, ssm_state=None):
+        """Tiny same-family config for CPU smoke tests."""
+        return dataclasses.replace(
+            self, n_layers=n_layers, d_model=d_model, n_heads=n_heads,
+            n_kv_heads=n_kv_heads or max(1, n_heads // 2), d_ff=d_ff,
+            vocab=vocab,
+            n_experts=(min(self.n_experts, 8) if n_experts is None
+                       else n_experts),
+            top_k=min(self.top_k, 2) if self.n_experts else 0,
+            n_shared_experts=min(self.n_shared_experts, 1),
+            ssm_state=(min(self.ssm_state, 16) if ssm_state is None
+                       else ssm_state),
+            ssm_headdim=16, n_patches=min(self.n_patches, 8), attn_every=2,
+            window=min(self.window, 64) if self.window else None,
+            dtype=jnp.float32, kv_chunk=64)
+
+
+class ParamDef(NamedTuple):
+    shape: tuple
+    axes: tuple                    # logical axis names (len == len(shape))
+    dtype: Any = None              # None -> cfg.dtype
+    scale: Optional[float] = None  # None -> 1/sqrt(fan_in)
+
+
+def _attn_defs(cfg: ArchConfig, L: Optional[int], prefix_axes=()):
+    """Attention block defs; L=None means unstacked (shared block)."""
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    st = (lambda s, a: ParamDef((L,) + s, ("layers",) + a)) if L else \
+        (lambda s, a: ParamDef(s, a))
+    defs = {
+        "ln": st((d,), ("d_model",)),
+        "wq": st((d, H * hd), ("d_model", "qkv")),
+        "wk": st((d, Hkv * hd), ("d_model", "qkv")),
+        "wv": st((d, Hkv * hd), ("d_model", "qkv")),
+        "wo": st((H * hd, d), ("qkv", "d_model")),
+    }
+    if cfg.family == "encoder":
+        defs["ln_b"] = st((d,), ("d_model",))
+    if cfg.qkv_bias:
+        defs["bq"] = st((H * hd,), ("qkv",))
+        defs["bk"] = st((Hkv * hd,), ("qkv",))
+        defs["bv"] = st((Hkv * hd,), ("qkv",))
+    return defs
+
+
+def _mlp_defs(cfg: ArchConfig, L: int):
+    d, ff = cfg.d_model, cfg.d_ff
+    if cfg.family == "encoder":             # GELU MLP with biases
+        return {
+            "ln": ParamDef((L, d), ("layers", "d_model")),
+            "ln_b": ParamDef((L, d), ("layers", "d_model")),
+            "w_in": ParamDef((L, d, ff), ("layers", "d_model", "ff")),
+            "b_in": ParamDef((L, ff), ("layers", "ff")),
+            "w_out": ParamDef((L, ff, d), ("layers", "ff", "d_model")),
+            "b_out": ParamDef((L, d), ("layers", "d_model")),
+        }
+    return {
+        "ln": ParamDef((L, d), ("layers", "d_model")),
+        "w_gate": ParamDef((L, d, ff), ("layers", "d_model", "ff")),
+        "w_up": ParamDef((L, d, ff), ("layers", "d_model", "ff")),
+        "w_down": ParamDef((L, ff, d), ("layers", "ff", "d_model")),
+    }
+
+
+def _moe_defs(cfg: ArchConfig, L: int):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    defs = {
+        "ln": ParamDef((L, d), ("layers", "d_model")),
+        "router": ParamDef((L, d, E), ("layers", "d_model", None)),
+        "w_gate": ParamDef((L, E, d, ff), ("layers", "expert", "d_model", None)),
+        "w_up": ParamDef((L, E, d, ff), ("layers", "expert", "d_model", None)),
+        "w_down": ParamDef((L, E, ff, d), ("layers", "expert", None, "d_model")),
+    }
+    if cfg.n_shared_experts:
+        fs = ff * cfg.n_shared_experts
+        defs["shared"] = {
+            "w_gate": ParamDef((L, d, fs), ("layers", "d_model", "ff")),
+            "w_up": ParamDef((L, d, fs), ("layers", "d_model", "ff")),
+            "w_down": ParamDef((L, fs, d), ("layers", "ff", "d_model")),
+        }
+    return defs
+
+
+def _mamba_defs(cfg: ArchConfig, L: int):
+    d, ds = cfg.d_model, cfg.ssm_state
+    d_inner, n_heads = ssm_lib.mamba2_dims(d, ds, cfg.ssm_headdim)
+    d_in_proj = 2 * d_inner + 2 * ds + n_heads
+    return {
+        "ln": ParamDef((L, d), ("layers", "d_model")),
+        "in_proj": ParamDef((L, d, d_in_proj), ("layers", "d_model", None)),
+        "conv_w": ParamDef((L, ssm_lib.CONV_W, d_inner + 2 * ds),
+                           ("layers", None, "ff"), scale=0.5),
+        "A_log": ParamDef((L, n_heads), ("layers", None), dtype=jnp.float32),
+        "D": ParamDef((L, n_heads), ("layers", None), dtype=jnp.float32),
+        "dt_bias": ParamDef((L, n_heads), ("layers", None),
+                            dtype=jnp.float32),
+        "out_proj": ParamDef((L, d_inner, d), ("layers", "ff", "d_model")),
+    }
+
+
+def _xlstm_defs(cfg: ArchConfig, L: int):
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    mk = lambda: ParamDef((L, d, d), ("layers", "d_model", "qkv"))
+    return {
+        "m": {  # mLSTM blocks
+            "ln": ParamDef((L, d), ("layers", "d_model")),
+            "wq": mk(), "wk": mk(), "wv": mk(), "wo": mk(),
+            "wi": ParamDef((L, d, H), ("layers", "d_model", None)),
+            "wf": ParamDef((L, d, H), ("layers", "d_model", None)),
+        },
+        "s": {  # sLSTM blocks
+            "ln": ParamDef((L, d), ("layers", "d_model")),
+            "wz": mk(), "wi": mk(), "wf": mk(), "wo": mk(),
+            "rz": ParamDef((L, H, hd, hd), ("layers", "heads", None, None)),
+            "ri": ParamDef((L, H, hd, hd), ("layers", "heads", None, None)),
+            "rf": ParamDef((L, H, hd, hd), ("layers", "heads", None, None)),
+            "ro": ParamDef((L, H, hd, hd), ("layers", "heads", None, None)),
+            "w_out": mk(),
+        },
+    }
+
+
+def param_defs(cfg: ArchConfig):
+    d, V, L = cfg.d_model, cfg.vocab, cfg.n_layers
+    defs: dict = {"final_ln": ParamDef((d,), ("d_model",))}
+    if cfg.input_mode in ("tokens", "mixed"):
+        defs["embed"] = ParamDef((V, d), ("vocab", "d_model"),
+                                 scale=d ** -0.5)
+    if cfg.input_mode in ("embeds",):
+        defs["in_proj"] = ParamDef((d, d), ("d_model", None))
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, V), ("d_model", "vocab"))
+    if cfg.family == "encoder":
+        defs["final_ln_b"] = ParamDef((d,), ("d_model",))
+
+    if cfg.family in ("dense", "encoder"):
+        defs["blocks"] = {"attn": _attn_defs(cfg, L), "mlp": _mlp_defs(cfg, L)}
+    elif cfg.family == "moe":
+        defs["blocks"] = {"attn": _attn_defs(cfg, L), "moe": _moe_defs(cfg, L)}
+    elif cfg.family == "mamba_hybrid":
+        defs["blocks"] = {"mamba": _mamba_defs(cfg, L)}
+        defs["shared_attn"] = _attn_defs(cfg, None)      # one shared block
+        if cfg.d_ff:                                     # zamba2 shared MLP
+            defs["shared_mlp"] = {
+                "ln": ParamDef((d,), ("d_model",)),
+                "w_gate": ParamDef((d, cfg.d_ff), ("d_model", "ff")),
+                "w_up": ParamDef((d, cfg.d_ff), ("d_model", "ff")),
+                "w_down": ParamDef((cfg.d_ff, d), ("ff", "d_model")),
+            }
+    elif cfg.family == "xlstm":
+        assert L % 2 == 0
+        defs["blocks"] = _xlstm_defs(cfg, L // 2)        # m/s pairs
+    else:
+        raise ValueError(cfg.family)
+    return defs
+
+
+# -------------------------------------------------- materializations
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+_ONES_NAMES = {"ln", "final_ln", "D"}          # norm scales / skip gains
+_ZEROS_NAMES = {"ln_b", "final_ln_b", "A_log", "dt_bias",
+                "bq", "bk", "bv", "b_in", "b_out"}
+
+
+def init_params(cfg: ArchConfig, key):
+    paths_and_defs, treedef = jax.tree_util.tree_flatten_with_path(
+        param_defs(cfg), is_leaf=_is_def)
+    keys = jax.random.split(key, len(paths_and_defs))
+
+    def leaf_name(path):
+        last = path[-1]
+        return getattr(last, "key", str(last))
+
+    out = []
+    for (path, d), k in zip(paths_and_defs, keys):
+        name = leaf_name(path)
+        dtype = d.dtype or cfg.dtype
+        if name in _ONES_NAMES:
+            out.append(jnp.ones(d.shape, dtype))
+        elif name in _ZEROS_NAMES:
+            out.append(jnp.zeros(d.shape, dtype))
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            scale = d.scale if d.scale is not None else 1.0 / np.sqrt(fan_in)
+            out.append((jax.random.normal(k, d.shape) * scale).astype(dtype))
+    return treedef.unflatten(out)
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype or cfg.dtype),
+        param_defs(cfg), is_leaf=_is_def)
+
+
+def logical_axes(cfg: ArchConfig):
+    return jax.tree.map(lambda d: d.axes, param_defs(cfg), is_leaf=_is_def)
+
+
+# ================================================================ forward
+def _identity_shard(x, *axes):
+    return x
+
+
+def _attn_apply(cfg: ArchConfig, p, x, *, shard, positions, kv_cache=None,
+                cache_pos=None, window=None, causal=True):
+    """One attention application.
+
+    Train/prefill: kv_cache is None -> attends within x, returns (out, (k, v)).
+    Decode: kv_cache = (k_buf (B,S,Hkv,hd), v_buf) ring buffer; cache_pos is
+    the number of tokens already in context; returns (out, (k_buf, v_buf)).
+    """
+    B, T, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = rms_norm(x, p["ln"]) if "ln_b" not in p else \
+        layer_norm(x, p["ln"], p["ln_b"])
+    q = h @ p["wq"] + (p["bq"] if "bq" in p else 0.0)
+    k = h @ p["wk"] + (p["bk"] if "bk" in p else 0.0)
+    v = h @ p["wv"] + (p["bv"] if "bv" in p else 0.0)
+    q = shard(q.reshape(B, T, H, hd), "batch", "seq", "heads", None)
+    # kv heads (often < TP degree) are pinned batch-sharded/replicated:
+    # without this GSPMD invents fractional-head layouts whose reshards
+    # can span the pod axis (observed in §Perf cell C).
+    k = shard(k.reshape(B, T, Hkv, hd), "batch", None, None, None)
+    v = shard(v.reshape(B, T, Hkv, hd), "batch", None, None, None)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is None:
+        out = attention(q, k, v, causal=causal, q_offset=0, window=window,
+                        impl=cfg.attn_impl, kv_chunk=cfg.kv_chunk)
+        new_kv = (k, v)
+    else:
+        k_buf, v_buf = kv_cache
+        S = k_buf.shape[1]
+        slot = (cache_pos % S).astype(jnp.int32)
+        k_buf = lax.dynamic_update_slice(k_buf, k.astype(k_buf.dtype),
+                                         (0, slot, 0, 0))
+        v_buf = lax.dynamic_update_slice(v_buf, v.astype(v_buf.dtype),
+                                         (0, slot, 0, 0))
+        # Validity: ring buffer holds min(cache_pos+1, S) entries.
+        n_valid = jnp.minimum(cache_pos + 1, S)
+        kpos = jnp.arange(S)
+        mask = kpos < n_valid                          # (S,)
+        scale = hd ** -0.5
+        # GQA-aware grouped attention: NO head repeat (a repeat forces
+        # GSPMD to reshard the whole cache; grouped einsums leave the
+        # context dim sharded and reduce only stat/output-sized tensors).
+        rep = H // Hkv
+        qg = q.reshape(B, T, Hkv, rep, hd)             # (B,1,Hkv,rep,hd)
+        s = jnp.einsum("bqgrd,bsgd->bgrqs", qg,
+                       k_buf.astype(qg.dtype)) * scale
+        s = jnp.where(mask[None, None, None, None, :],
+                      s.astype(jnp.float32), -1e30)
+        w = jax.nn.softmax(s, axis=-1).astype(qg.dtype)
+        out = jnp.einsum("bgrqs,bsgd->bqgrd", w, v_buf.astype(qg.dtype))
+        out = out.reshape(B, T, H, hd)
+        new_kv = (k_buf, v_buf)
+    out = out.reshape(B, T, H * hd)
+    # constraint directly on the row-parallel product so GSPMD fuses the
+    # TP partial-sum all-reduce + slice into a reduce-scatter (Megatron-SP)
+    proj = shard(out @ p["wo"], "batch", "resid_seq", None)
+    return x + proj, new_kv
+
+
+def _ffn_apply(cfg: ArchConfig, p, x, *, shard):
+    """Dense (SwiGLU / GELU) or MoE FFN with residual; returns (x, aux)."""
+    if cfg.family == "moe" or ("router" in p):
+        h = rms_norm(x, p["ln"])
+        moe_params = {k: p[k] for k in
+                      ("router", "w_gate", "w_up", "w_down")}
+        if "shared" in p:
+            moe_params["shared"] = p["shared"]
+        y, aux = moe_lib.moe_ffn(moe_params, h, top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor,
+                                 shard=shard,
+                                 dispatch_groups=cfg.moe_dispatch_groups)
+        return x + shard(y, "batch", "resid_seq", None), aux
+    if "b_in" in p:                                   # encoder GELU MLP
+        h = layer_norm(x, p["ln"], p["ln_b"])
+        y = gelu_mlp(h, p["w_in"], p["b_in"], p["w_out"], p["b_out"])
+        return x + shard(y, "batch", "resid_seq", None), 0.0
+    h = rms_norm(x, p["ln"])
+    y = swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+    return x + shard(y, "batch", "resid_seq", None), 0.0
+
+
+# ---------------------------------------------------------------- embed
+def embed_inputs(cfg: ArchConfig, params, batch, shard):
+    """Returns (x (B,T,d), positions (B,T), loss_mask (B,T) or None)."""
+    if cfg.input_mode == "tokens":
+        x = params["embed"][batch["tokens"]].astype(cfg.dtype)
+        B, T = batch["tokens"].shape
+        pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+        mask = None
+    elif cfg.input_mode == "embeds":                  # audio frontend stub
+        x = (batch["embeds"].astype(cfg.dtype)) @ params["in_proj"]
+        B, T = x.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+        mask = None
+    else:                                             # mixed: VLM stub
+        tok = params["embed"][batch["tokens"]].astype(cfg.dtype)
+        patches = batch["patches"].astype(cfg.dtype)
+        x = jnp.concatenate([patches, tok], axis=1)
+        B, T = x.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+        mask = jnp.concatenate(
+            [jnp.zeros((B, patches.shape[1]), bool),
+             jnp.ones((B, tok.shape[1]), bool)], axis=1)
+    return shard(x, "batch", "seq", None), pos, mask
+
+
+def unembed(cfg: ArchConfig, params, x, shard):
+    x = rms_norm(x, params["final_ln"]) if "final_ln_b" not in params else \
+        layer_norm(x, params["final_ln"], params["final_ln_b"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+# ------------------------------------------------------------ stacks
+def _scan_blocks(cfg, body, x_init, stacked, length, remat):
+    if remat and cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    return lax.scan(body, x_init, stacked, length=length)
+
+
+def forward(cfg: ArchConfig, params, batch, *, shard=_identity_shard,
+            mode="train"):
+    """Full-sequence forward. Returns (logits, aux, cache_out).
+
+    cache_out is a prefill cache for decoder families when mode='prefill',
+    else None.
+    """
+    x, positions, loss_mask = embed_inputs(cfg, params, batch, shard)
+    B, T, _ = x.shape
+    aux0 = jnp.zeros((), jnp.float32)
+    want_cache = (mode == "prefill")
+    cache_out = None
+
+    if cfg.family in ("dense", "moe", "encoder"):
+        blocks = params["blocks"]
+        ffn_key = "moe" if cfg.family == "moe" else "mlp"
+
+        def body(carry, blk):
+            x, aux = carry
+            x, kv = _attn_apply(cfg, blk["attn"], x, shard=shard,
+                                positions=positions, causal=cfg.causal,
+                                window=cfg.window)
+            # residual stream: with resid_seq=('model',) this is Megatron-SP
+            # (activations and saved residuals sharded over seq between
+            # blocks; TP all-reduces become reduce-scatter/all-gather pairs)
+            x = shard(x, "batch", "resid_seq", None)
+            x, a = _ffn_apply(cfg, blk[ffn_key], x, shard=shard)
+            x = shard(x, "batch", "resid_seq", None)
+            ys = kv if want_cache else None
+            return (x, aux + a), ys
+
+        stacked = {"attn": blocks["attn"], ffn_key: blocks[ffn_key]}
+        (x, aux0), kvs = _scan_blocks(cfg, body, (x, aux0), stacked,
+                                      cfg.n_layers, mode == "train")
+        if want_cache and cfg.has_decode:
+            cache_out = {"k": kvs[0], "v": kvs[1],
+                         "pos": jnp.full((), T, jnp.int32)}
+
+    elif cfg.family == "mamba_hybrid":
+        x, aux0, cache_out = _hybrid_forward(cfg, params, x, positions,
+                                             shard, mode)
+    elif cfg.family == "xlstm":
+        x, aux0, cache_out = _xlstm_forward(cfg, params, x, shard, mode)
+    else:
+        raise ValueError(cfg.family)
+
+    logits = unembed(cfg, params, x, shard)
+    return logits, aux0, (cache_out if want_cache else None), loss_mask
+
+
+def _hybrid_forward(cfg, params, x, positions, shard, mode):
+    """Groups of `attn_every` Mamba2 layers + one shared attention block."""
+    L = cfg.n_layers
+    G = L // cfg.attn_every                   # full groups with attention
+    tail = L - G * cfg.attn_every
+    mm = params["blocks"]["mamba"]
+    want_cache = (mode == "prefill")
+
+    def mamba_body(carry, blk):
+        x = carry
+        h = rms_norm(x, blk["ln"])
+        y, (s, cs) = ssm_lib.mamba2_scan(
+            {k: blk[k] for k in ("in_proj", "conv_w", "A_log", "D",
+                                 "dt_bias", "out_proj")},
+            h, cfg.ssm_state, cfg.ssm_headdim)
+        return x + y, (s, cs) if want_cache else None
+
+    def group_body(carry, grp):
+        x = carry
+        x, states = _scan_blocks(cfg, mamba_body, x, grp, cfg.attn_every,
+                                 mode == "train")
+        x, kv = _attn_apply(cfg, params["shared_attn"], x, shard=shard,
+                            positions=positions, causal=True,
+                            window=cfg.window)
+        if "shared_mlp" in params:
+            x, _ = _ffn_apply(cfg, params["shared_mlp"], x, shard=shard)
+        ys = (states, kv) if want_cache else None
+        return x, ys
+
+    head = jax.tree.map(
+        lambda a: a[:G * cfg.attn_every].reshape(
+            (G, cfg.attn_every) + a.shape[1:]), mm)
+    x, grp_ys = _scan_blocks(cfg, group_body, x, head, G, mode == "train")
+    tail_states = None
+    if tail:
+        tail_stack = jax.tree.map(lambda a: a[G * cfg.attn_every:], mm)
+        x, tail_states = _scan_blocks(cfg, mamba_body, x, tail_stack, tail,
+                                      mode == "train")
+    cache_out = None
+    if want_cache:
+        states, kvs = grp_ys
+        cache_out = {"groups": states, "attn_k": kvs[0], "attn_v": kvs[1],
+                     "tail": tail_states,
+                     "pos": jnp.full((), x.shape[1], jnp.int32)}
+    return x, jnp.zeros((), jnp.float32), cache_out
+
+
+def _xlstm_forward(cfg, params, x, shard, mode):
+    blocks = params["blocks"]
+    want_cache = (mode == "prefill")
+
+    def body(carry, blk):
+        x = carry
+        bm, bs = blk["m"], blk["s"]
+        h = rms_norm(x, bm["ln"])
+        y, m_state = ssm_lib.mlstm_scan(
+            {k: bm[k] for k in ("wq", "wk", "wv", "wi", "wf", "wo")},
+            h, cfg.n_heads)
+        x = x + y
+        h = rms_norm(x, bs["ln"])
+        y, s_state = ssm_lib.slstm_scan(
+            {k: bs[k] for k in ("wz", "wi", "wf", "wo", "rz", "ri", "rf",
+                                "ro", "w_out")}, h, cfg.n_heads)
+        x = x + y
+        return x, (m_state, s_state) if want_cache else None
+
+    x, states = _scan_blocks(cfg, body, x, blocks, cfg.n_layers // 2,
+                             mode == "train")
+    cache_out = None
+    if want_cache:
+        cache_out = {"states": states,
+                     "pos": jnp.full((), x.shape[1], jnp.int32)}
+    return x, jnp.zeros((), jnp.float32), cache_out
+
+
+# ============================================================ decode
+def cache_defs(cfg: ArchConfig, batch: int, context: int):
+    """Abstract decode-cache structure (shapes + logical axes) per family."""
+    B, S = batch, context
+    Hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    L = cfg.n_layers
+    if cfg.family in ("dense", "moe"):
+        return {
+            "k": ParamDef((L, B, S, Hkv, hd),
+                          ("layers", "kv_batch", "kv_seq", None, None)),
+            "v": ParamDef((L, B, S, Hkv, hd),
+                          ("layers", "kv_batch", "kv_seq", None, None)),
+            "pos": ParamDef((), (), jnp.int32),
+        }
+    if cfg.family == "mamba_hybrid":
+        d_inner, H = ssm_lib.mamba2_dims(cfg.d_model, cfg.ssm_state,
+                                         cfg.ssm_headdim)
+        G = cfg.n_layers // cfg.attn_every
+        tail = cfg.n_layers - G * cfg.attn_every
+        W = min(cfg.window or S, S)
+        conv_c = d_inner + 2 * cfg.ssm_state
+        defs = {
+            "ssm": ParamDef((L, B, H, cfg.ssm_state, cfg.ssm_headdim),
+                            ("layers", "kv_batch", "heads", None, None),
+                            jnp.float32),
+            "conv": ParamDef((L, B, ssm_lib.CONV_W - 1, conv_c),
+                             ("layers", "kv_batch", None, "ff")),
+            "attn_k": ParamDef((G, B, W, Hkv, hd),
+                               ("layers", "kv_batch", None, None, None)),
+            "attn_v": ParamDef((G, B, W, Hkv, hd),
+                               ("layers", "kv_batch", None, None, None)),
+            "pos": ParamDef((), (), jnp.int32),
+        }
+        return defs
+    if cfg.family == "xlstm":
+        L2, H = cfg.n_layers // 2, cfg.n_heads
+        hd2 = cfg.d_model // H
+        f32 = jnp.float32
+        return {
+            "m_C": ParamDef((L2, B, H, hd2, hd2),
+                            ("layers", "kv_batch", "heads", None, None), f32),
+            "m_n": ParamDef((L2, B, H, hd2),
+                            ("layers", "kv_batch", "heads", None), f32),
+            "m_m": ParamDef((L2, B, H), ("layers", "kv_batch", "heads"), f32),
+            "s_c": ParamDef((L2, B, H, hd2),
+                            ("layers", "kv_batch", "heads", None), f32),
+            "s_n": ParamDef((L2, B, H, hd2),
+                            ("layers", "kv_batch", "heads", None), f32),
+            "s_m": ParamDef((L2, B, H, hd2),
+                            ("layers", "kv_batch", "heads", None), f32),
+            "s_h": ParamDef((L2, B, H, hd2),
+                            ("layers", "kv_batch", "heads", None), f32),
+            "pos": ParamDef((), (), jnp.int32),
+        }
+    raise ValueError(f"{cfg.family} has no decode cache")
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, context: int):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype or cfg.dtype),
+        cache_defs(cfg, batch, context), is_leaf=_is_def)
+
+
+def init_cache(cfg: ArchConfig, batch: int, context: int, filled=True):
+    """Zero cache with pos=context (mimics a fully prefilled context)."""
+    c = jax.tree.map(
+        lambda d: jnp.zeros(d.shape, d.dtype or cfg.dtype),
+        cache_defs(cfg, batch, context), is_leaf=_is_def)
+    c["pos"] = jnp.full((), context if filled else 0, jnp.int32)
+    return c
+
+
+def cache_logical_axes(cfg: ArchConfig, batch: int = 1, context: int = 8):
+    return jax.tree.map(lambda d: d.axes, cache_defs(cfg, batch, context),
+                        is_leaf=_is_def)
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, *,
+                shard=_identity_shard):
+    """One decode step: tokens (B, 1) int32 -> (logits (B,1,V), new cache)."""
+    B = tokens.shape[0]
+    x = params["embed"][tokens].astype(cfg.dtype)
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos, (B, 1))
+
+    if cfg.family in ("dense", "moe"):
+        blocks = params["blocks"]
+        ffn_key = "moe" if cfg.family == "moe" else "mlp"
+
+        def body(x, blk_and_cache):
+            blk, k_buf, v_buf = blk_and_cache
+            x, (k_buf, v_buf) = _attn_apply(
+                cfg, blk["attn"], x, shard=shard, positions=positions,
+                kv_cache=(k_buf, v_buf), cache_pos=pos)
+            x, _ = _ffn_apply(cfg, blk[ffn_key], x, shard=shard)
+            return x, (k_buf, v_buf)
+
+        stacked = ({"attn": blocks["attn"], ffn_key: blocks[ffn_key]},
+                   cache["k"], cache["v"])
+        x, (new_k, new_v) = lax.scan(body, x, stacked)
+        new_cache = {"k": new_k, "v": new_v, "pos": pos + 1}
+
+    elif cfg.family == "mamba_hybrid":
+        x, new_cache = _hybrid_decode(cfg, params, x, positions, cache,
+                                      shard)
+    elif cfg.family == "xlstm":
+        x, new_cache = _xlstm_decode(cfg, params, x, cache)
+    else:
+        raise ValueError(f"{cfg.family} does not decode")
+
+    logits = unembed(cfg, params, x, shard)
+    return logits, new_cache
+
+
+def _hybrid_decode(cfg, params, x, positions, cache, shard):
+    pos = cache["pos"]
+    G = cfg.n_layers // cfg.attn_every
+    tail = cfg.n_layers - G * cfg.attn_every
+    mm = params["blocks"]["mamba"]
+
+    def mamba_body(x, blk_and_state):
+        blk, s, cs = blk_and_state
+        h = rms_norm(x, blk["ln"])
+        y, (s, cs) = ssm_lib.mamba2_scan(
+            {k: blk[k] for k in ("in_proj", "conv_w", "A_log", "D",
+                                 "dt_bias", "out_proj")},
+            h, cfg.ssm_state, cfg.ssm_headdim, state=s, conv_state=cs)
+        return x + y, (s, cs)
+
+    n_head_layers = G * cfg.attn_every
+    head_stack = jax.tree.map(
+        lambda a: a[:n_head_layers].reshape((G, cfg.attn_every) +
+                                            a.shape[1:]), mm)
+    ssm_head = cache["ssm"][:n_head_layers].reshape(
+        (G, cfg.attn_every) + cache["ssm"].shape[1:])
+    conv_head = cache["conv"][:n_head_layers].reshape(
+        (G, cfg.attn_every) + cache["conv"].shape[1:])
+
+    def group_body(x, grp):
+        blks, ssm_s, conv_s, k_buf, v_buf = grp
+
+        def inner(x, b):
+            blk, s, cs = b
+            x, (s, cs) = mamba_body(x, (blk, s, cs))
+            return x, (s, cs)
+
+        x, (new_s, new_cs) = lax.scan(inner, x, (blks, ssm_s, conv_s))
+        x, (k_buf, v_buf) = _attn_apply(
+            cfg, params["shared_attn"], x, shard=shard, positions=positions,
+            kv_cache=(k_buf, v_buf), cache_pos=pos)
+        if "shared_mlp" in params:
+            x, _ = _ffn_apply(cfg, params["shared_mlp"], x, shard=shard)
+        return x, (new_s, new_cs, k_buf, v_buf)
+
+    x, (s_h, cs_h, new_k, new_v) = lax.scan(
+        group_body, x, (head_stack, ssm_head, conv_head,
+                        cache["attn_k"], cache["attn_v"]))
+    new_ssm = s_h.reshape((n_head_layers,) + cache["ssm"].shape[1:])
+    new_conv = cs_h.reshape((n_head_layers,) + cache["conv"].shape[1:])
+    if tail:
+        tail_stack = jax.tree.map(lambda a: a[n_head_layers:], mm)
+        x, (s_t, cs_t) = lax.scan(
+            mamba_body, x,
+            (tail_stack, cache["ssm"][n_head_layers:],
+             cache["conv"][n_head_layers:]))
+        new_ssm = jnp.concatenate([new_ssm, s_t], 0)
+        new_conv = jnp.concatenate([new_conv, cs_t], 0)
+    return x, {"ssm": new_ssm, "conv": new_conv, "attn_k": new_k,
+               "attn_v": new_v, "pos": pos + 1}
+
+
+def _xlstm_decode(cfg, params, x, cache):
+    blocks = params["blocks"]
+
+    def body(x, blk_and_state):
+        blk, mC, mn, mm_, sc, sn, sm, sh = blk_and_state
+        bm, bs = blk["m"], blk["s"]
+        h = rms_norm(x, bm["ln"])
+        y, (mC, mn, mm_) = ssm_lib.mlstm_scan(
+            {k: bm[k] for k in ("wq", "wk", "wv", "wi", "wf", "wo")},
+            h, cfg.n_heads, state=(mC, mn, mm_))
+        x = x + y
+        h = rms_norm(x, bs["ln"])
+        y, (sc, sn, sm, sh) = ssm_lib.slstm_scan(
+            {k: bs[k] for k in ("wz", "wi", "wf", "wo", "rz", "ri", "rf",
+                                "ro", "w_out")}, h, cfg.n_heads,
+            state=(sc, sn, sm, sh))
+        x = x + y
+        return x, (mC, mn, mm_, sc, sn, sm, sh)
+
+    xs = (blocks, cache["m_C"], cache["m_n"], cache["m_m"], cache["s_c"],
+          cache["s_n"], cache["s_m"], cache["s_h"])
+    x, (mC, mn, mm_, sc, sn, sm, sh) = lax.scan(body, x, xs)
+    return x, {"m_C": mC, "m_n": mn, "m_m": mm_, "s_c": sc, "s_n": sn,
+               "s_m": sm, "s_h": sh, "pos": cache["pos"] + 1}
+
+
+# ============================================================== loss/steps
+def loss_fn(cfg: ArchConfig, params, batch, *, shard=_identity_shard):
+    logits, aux, _, loss_mask = forward(cfg, params, batch, shard=shard,
+                                        mode="train")
+    logits = logits.astype(jnp.float32)
+    if cfg.family == "encoder" or not cfg.causal:
+        labels = batch["labels"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+        ce = lse - gold
+        mask = jnp.ones_like(ce, bool)
+    else:
+        targets = batch["tokens"][:, 1:] if cfg.input_mode != "mixed" else \
+            batch["tokens"][:, 1:]
+        if cfg.input_mode == "mixed":
+            logits_txt = logits[:, cfg.n_patches:, :]
+            pred = logits_txt[:, :-1]
+        else:
+            pred = logits[:, :-1]
+        lse = jax.nn.logsumexp(pred, axis=-1)
+        gold = jnp.take_along_axis(pred, targets[..., None], -1)[..., 0]
+        ce = lse - gold
+        mask = jnp.ones_like(ce, bool)
+    loss = jnp.sum(jnp.where(mask, ce, 0.0)) / jnp.maximum(mask.sum(), 1)
+    return loss + 0.01 * aux, {"ce": loss, "aux": aux}
+
+
+def make_train_step(cfg: ArchConfig, optimizer, *, shard=_identity_shard,
+                    lr_schedule=None, clip_norm: float = 1.0):
+    from repro.optim import clip_by_global_norm
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, shard=shard),
+            has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        scale = (lr_schedule(opt_state["step"]) if lr_schedule is not None
+                 else 1.0)
+        params, opt_state = optimizer.update(grads, opt_state, params,
+                                             lr_scale=scale)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, *, shard=_identity_shard,
+                      pad_to: Optional[int] = None):
+    """pad_to: allocate KV-cache headroom for subsequent decode steps
+    (ring-buffer semantics mean an unpadded cache evicts the oldest
+    context token on the first decode)."""
+
+    def prefill_step(params, batch):
+        logits, _, cache, _ = forward(cfg, params, batch, shard=shard,
+                                      mode="prefill")
+        if pad_to is not None and cache is not None:
+            for key in ("k", "v"):
+                if key in cache:
+                    kv = cache[key]
+                    pad = pad_to - kv.shape[2]
+                    if pad > 0:
+                        cache[key] = jnp.pad(
+                            kv, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        return logits[:, -1:], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, *, shard=_identity_shard):
+    def serve_step(params, cache, tokens):
+        return decode_step(cfg, params, cache, tokens, shard=shard)
+
+    return serve_step

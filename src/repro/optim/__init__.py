@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (Optimizer, adafactor, adamw, clip_by_global_norm,
+                                    get as get_optimizer, sgd)
+from repro.optim.schedules import constant, cosine, linear_warmup
+
+__all__ = ["Optimizer", "adafactor", "adamw", "sgd", "get_optimizer",
+           "clip_by_global_norm", "constant", "cosine", "linear_warmup"]

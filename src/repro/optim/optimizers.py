@@ -1,0 +1,136 @@
+"""Pure-JAX optimizers (SGD+momentum, AdamW, Adafactor).
+
+Interface: ``opt = sgd(lr=...)``; ``state = opt.init(params)``;
+``params, state = opt.update(grads, state, params)``.  All state lives in a
+pytree mirroring the parameters, so it shards exactly like them (ZeRO-style
+when the params are FSDP-sharded).
+
+Adafactor keeps factored fp32 second moments for >=2-D leaves — the memory-
+sane choice for the 100B+ architectures in the dry-run (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+def sgd(lr=1e-2, momentum=0.9, nesterov=False) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(jnp.zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr_scale=1.0):
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: momentum * m + g, mu, grads)
+        else:
+            upd = mu
+        step_lr = lr * lr_scale
+        new_params = jax.tree.map(
+            lambda p, u: (p - step_lr * u).astype(p.dtype), params, upd)
+        return new_params, {"mu": mu, "step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(f32, params),
+                "v": jax.tree.map(f32, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr_scale=1.0):
+        step = state["step"] + 1
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) *
+                         g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) *
+                         jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        step_lr = lr * lr_scale
+
+        def upd(p, mi, vi):
+            mhat, vhat = mi / bc1, vi / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * \
+                p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step_lr * delta).astype(p.dtype)
+
+        return (jax.tree.map(upd, params, m, v),
+                {"m": m, "v": v, "step": step})
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr=1e-2, decay=0.8, eps=1e-30, clip_threshold=1.0) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern, 2018), simplified."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def make(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"mom": jax.tree.map(make, params,
+                                    is_leaf=lambda x: hasattr(x, "shape")),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr_scale=1.0):
+        step = state["step"] + 1
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** -decay
+        step_lr = lr * lr_scale
+
+        def upd(p, g, s):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :] /
+                    jnp.maximum(vr.mean(-1)[..., None, None], eps))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                denom = jnp.sqrt(v)
+                new_s = {"v": v}
+            u = g32 / jnp.maximum(denom, eps)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - step_lr * u).astype(p.dtype), new_s
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["mom"])
+        out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_mom = tdef.unflatten([o[1] for o in out])
+        return new_params, {"mom": new_mom, "step": step}
+
+    return Optimizer(init, update)
+
+
+_REGISTRY = {"sgd": sgd, "adamw": adamw, "adafactor": adafactor}
+
+
+def get(name: str, **kw) -> Optimizer:
+    return _REGISTRY[name](**kw)

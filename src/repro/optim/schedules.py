@@ -1,0 +1,27 @@
+"""Learning-rate schedules as step -> scale callables (jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant():
+    return lambda step: jnp.ones((), jnp.float32)
+
+
+def linear_warmup(warmup_steps: int):
+    def f(step):
+        s = step.astype(jnp.float32)
+        return jnp.minimum(1.0, (s + 1.0) / float(max(warmup_steps, 1)))
+    return f
+
+
+def cosine(total_steps: int, warmup_steps: int = 0, final_scale: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, (s + 1.0) / float(max(warmup_steps, 1)))
+        frac = jnp.clip((s - warmup_steps) /
+                        float(max(total_steps - warmup_steps, 1)), 0.0, 1.0)
+        cos = final_scale + (1 - final_scale) * 0.5 * \
+            (1.0 + jnp.cos(jnp.pi * frac))
+        return warm * cos
+    return f

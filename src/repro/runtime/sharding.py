@@ -1,0 +1,98 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP) for the zoo.
+
+Every parameter and activation carries a tuple of *logical* axis names; a
+rule table maps those to mesh axes.  One rule table covers the whole zoo;
+per-arch overrides (e.g. FSDP over ('pod','data') for the trillion-param
+MoE) are a dict update away — this is the knob the §Perf hillclimbs turn.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis -> mesh axis (or tuple of axes, or None=replicate)."""
+
+    batch: tuple | str | None = ("data",)
+    seq: tuple | str | None = None          # SP: set to ('data',) for 500k
+    d_model: tuple | str | None = None      # FSDP axis for the embed dim
+    ff: tuple | str | None = ("model",)     # TP: FFN columns
+    heads: tuple | str | None = ("model",)  # TP: attention heads
+    qkv: tuple | str | None = ("model",)    # TP: flattened q/k/v output dim
+    vocab: tuple | str | None = ("model",)
+    expert: tuple | str | None = ("model",)  # EP
+    expert_cap: tuple | str | None = ("data",)
+    moe_groups: tuple | str | None = None    # MoE dispatch-group axis
+    moe_groups_ep: tuple | str | None = None  # group axis in expert compute
+    kv_batch: tuple | str | None = ("data",)  # decode-time KV cache batch
+    kv_seq: tuple | str | None = None        # decode KV cache seq (SP decode)
+    resid_seq: tuple | str | None = None     # Megatron-SP residual stream
+    hfl_pod: tuple | str | None = ("pod",)   # HFL-LM per-pod replica axis
+    microbatch: None = None                  # HFL-LM K-microbatch axis
+    layers: None = None                     # stacked-layer dim: never sharded
+    conv: None = None
+    state: None = None
+
+    def mesh_axes(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        v = getattr(self, logical)
+        if v is None or isinstance(v, str):
+            return v
+        return tuple(v) if len(v) > 1 else v[0]
+
+    def pspec(self, axes: tuple) -> P:
+        return P(*(self.mesh_axes(a) for a in axes))
+
+
+# Defaults used by the dry-run baseline; hillclimbs override fields.
+def default_rules(multi_pod: bool = False, fsdp_model_dim: bool = True,
+                  seq_shard: bool = False) -> ShardingRules:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return ShardingRules(
+        batch=dp,
+        d_model=("data",) if fsdp_model_dim else None,
+        seq=("data",) if seq_shard else None,
+    )
+
+
+def make_sharder(mesh: Optional[Mesh], rules: ShardingRules):
+    """Returns shard(x, *logical_axes) applying a sharding constraint.
+
+    With mesh=None (single-device smoke tests) it is the identity.
+    The mesh and rule table ride along as attributes so layers that need
+    explicit locality (shard_map regions, e.g. the MoE dispatch) can build
+    their own specs.
+    """
+    if mesh is None:
+        def shard(x, *axes):
+            return x
+        shard.mesh = None
+        shard.rules = rules
+        return shard
+
+    def shard(x, *axes):
+        spec = rules.pspec(axes)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+
+    shard.mesh = mesh
+    shard.rules = rules
+    return shard
+
+
+def tree_pspecs(axes_tree, rules: ShardingRules):
+    """Map a pytree of logical-axis tuples to PartitionSpecs."""
+    return jax.tree.map(lambda axes: rules.pspec(axes), axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def tree_shardings(mesh: Mesh, axes_tree, rules: ShardingRules):
+    return jax.tree.map(
+        lambda axes: NamedSharding(mesh, rules.pspec(axes)), axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple))

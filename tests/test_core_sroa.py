@@ -1,0 +1,167 @@
+"""Unit + property tests for the paper's cost model and SROA (Algs 2-4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines, sroa, system_model, wireless
+
+LAM = 1.0
+
+
+@pytest.fixture(scope="module")
+def scn():
+    return wireless.draw_scenario(0)
+
+
+@pytest.fixture(scope="module")
+def assign(scn):
+    return wireless.nearest_edge_assignment(scn)
+
+
+@pytest.fixture(scope="module")
+def sroa_res(scn, assign):
+    return sroa.solve(scn, assign, LAM)
+
+
+# ---------------------------------------------------------------- cost model
+def test_rate_monotone_in_bandwidth(scn):
+    b = jnp.linspace(1e3, 1e6, 64)
+    r = system_model.rate(b, 1e-10, 0.1, scn.N0)
+    assert bool(jnp.all(jnp.diff(r) > 0))
+
+
+def test_rate_lemma1_upper_bound():
+    """Lemma 1: b log2(1+G/b) < G/ln2 for all b."""
+    G = jnp.asarray([1e3, 1e6, 1e9])
+    for b in [1e2, 1e5, 1e8, 1e12]:
+        vals = sroa.rate_fn(jnp.full_like(G, b), G)
+        assert bool(jnp.all(vals <= (G / np.log(2.0)) * (1 + 1e-5)))
+
+
+def test_evaluate_matches_hand_computation(scn, assign):
+    """Cross-check eqs 4-15 against a straight numpy transcription."""
+    N, M = scn.N, scn.M
+    b = np.full(N, float(scn.B_total) / N)
+    f = np.asarray(scn.f_max)
+    p = np.asarray(scn.p_max)
+    a = np.asarray(assign)
+    g = np.asarray(scn.gain)[np.arange(N), a]
+    L, K, I = float(scn.L), float(scn.K), float(scn.I)
+    c, D = np.asarray(scn.c), np.asarray(scn.D)
+    s, N0, alpha = float(scn.s_bits), float(scn.N0), float(scn.alpha)
+
+    T_cmp = L * c * D / f
+    E_cmp = 0.5 * alpha * L * f ** 2 * c * D
+    r = b * np.log2(1.0 + g * p / (N0 * b))
+    T_com = s / r
+    E_com = p * T_com
+    T_cloud = np.asarray(scn.T_cloud())
+    E_cloud = np.asarray(scn.E_cloud())
+    T_m = np.array([K * (T_cmp + T_com)[a == m].max() if (a == m).any() else 0.0
+                    for m in range(M)])
+    E_m = np.array([K * (E_cmp + E_com)[a == m].sum() for m in range(M)])
+    occ = np.array([(a == m).any() for m in range(M)])
+    T_sum = I * (np.where(occ, T_cloud, 0) + T_m).max()
+    E_sum = I * (np.where(occ, E_cloud, 0) + E_m).sum()
+    R = E_sum + LAM * T_sum
+
+    cb = system_model.evaluate(scn, assign, jnp.asarray(b, jnp.float32),
+                               jnp.asarray(f), jnp.asarray(p), LAM)
+    np.testing.assert_allclose(float(cb.T_sum), T_sum, rtol=1e-5)
+    np.testing.assert_allclose(float(cb.E_sum), E_sum, rtol=1e-5)
+    np.testing.assert_allclose(float(cb.R), R, rtol=1e-5)
+
+
+# ------------------------------------------------------------------ invert
+@settings(max_examples=50, deadline=None)
+@given(G=st.floats(1e2, 1e10), frac=st.floats(0.01, 0.95))
+def test_invert_rate_property(G, frac):
+    """invert_rate returns the smallest b reaching any reachable target."""
+    b_max = 1e7
+    reachable = float(sroa.rate_fn(jnp.asarray(b_max), jnp.asarray(G)))
+    target = frac * reachable
+    b = float(sroa.invert_rate(jnp.asarray([G]), jnp.asarray([target]),
+                               b_max)[0])
+    got = float(sroa.rate_fn(jnp.asarray(b), jnp.asarray(G)))
+    assert got >= target * (1 - 1e-3)
+    if b > 1.0:  # minimality: slightly less bandwidth must miss the target
+        less = float(sroa.rate_fn(jnp.asarray(b * 0.99), jnp.asarray(G)))
+        assert less <= target * (1 + 1e-3)
+
+
+def test_invert_rate_infeasible_returns_bmax():
+    b = sroa.invert_rate(jnp.asarray([1e3]), jnp.asarray([1e9]), 1e6)
+    assert float(b[0]) == pytest.approx(1e6)
+
+
+# -------------------------------------------------------------------- SROA
+def test_sroa_feasible_and_respects_constraints(scn, assign, sroa_res):
+    res = sroa_res
+    assert bool(res.feasible)
+    assert float(res.b_sum) <= float(scn.B_total) * (1 + 2e-3)   # (15a-b)
+    assert bool(jnp.all(res.f <= scn.f_max * (1 + 1e-5)))        # (15c)
+    assert bool(jnp.all(res.f >= 0))
+    assert bool(jnp.all(res.p <= scn.p_max * (1 + 1e-5)))        # (15d)
+    assert bool(jnp.all(res.p >= 0))
+
+
+def test_sroa_deadline_met(scn, assign, sroa_res):
+    """Every user's total delay (constraint 17d) is within t*."""
+    cb = system_model.evaluate(scn, assign, sroa_res.b, sroa_res.f,
+                               sroa_res.p, LAM)
+    assert float(cb.T_sum) <= float(sroa_res.t) * (1 + 1e-2)
+
+
+def test_sroa_internal_R_matches_system_model(scn, assign, sroa_res):
+    """Algorithm 4's tracked R agrees with the eq-15 evaluation at t*."""
+    cb = system_model.evaluate(scn, assign, sroa_res.b, sroa_res.f,
+                               sroa_res.p, LAM)
+    # internal R uses the deadline t >= achieved delay; E parts must agree
+    internal_E = float(sroa_res.R) - LAM * float(sroa_res.t)
+    np.testing.assert_allclose(internal_E, float(cb.E_sum), rtol=1e-2)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_sroa_beats_every_baseline(seed):
+    """Paper Fig 2: SROA achieves the lowest objective value."""
+    scn = wireless.draw_scenario(seed)
+    assign = wireless.nearest_edge_assignment(scn)
+    scores = {}
+    for name, fn in baselines.RA_METHODS.items():
+        ra = fn(scn, assign, LAM)
+        scores[name] = float(system_model.evaluate(
+            scn, assign, ra.b, ra.f, ra.p, LAM).R)
+    best = min(scores, key=scores.get)
+    assert best == "SROA", scores
+
+
+def test_sroa_plus_no_worse_than_sroa(scn, assign, sroa_res):
+    plus = sroa.solve_plus(scn, assign, LAM)
+    assert float(plus.R) <= float(sroa_res.R) * (1 + 1e-6)
+
+
+@pytest.mark.parametrize("lam", [1e-3, 1.0, 1e3])
+def test_sroa_lambda_tradeoff(scn, assign, lam):
+    """Fig 3 mechanics: larger lambda buys lower delay at higher energy."""
+    res = sroa.solve(scn, assign, lam)
+    assert bool(res.feasible)
+
+
+def test_sroa_lambda_monotone_delay(scn, assign):
+    """T_sum should (weakly) fall as lambda rises."""
+    T = []
+    for lam in [1e-2, 1.0, 1e2]:
+        res = sroa.solve(scn, assign, lam)
+        cb = system_model.evaluate(scn, assign, res.b, res.f, res.p, lam)
+        T.append(float(cb.T_sum))
+    assert T[2] <= T[0] * (1 + 5e-2)
+
+
+def test_ofdma_quantization_feasible(scn, assign):
+    ra = baselines.sroa_ra(scn, assign, LAM)
+    q = baselines.to_ofdma(scn, ra)
+    b = np.asarray(q.b, np.float64)
+    assert b.sum() <= float(scn.B_total) * (1 + 1e-6)
+    np.testing.assert_allclose(b % baselines.SUBCARRIER_HZ, 0, atol=1.0)

@@ -1,0 +1,63 @@
+"""Distributed HFL (shard_map + psum) — runs in a subprocess with 8 forced
+host devices so the main test process keeps its single-device view."""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.data import make_dataset, partition_to_users
+    from repro.fed.distributed import make_distributed_global_iteration, \\
+        shard_clients
+    from repro.fed.hfl import HflConfig, global_iteration
+    from repro.models import cnn
+
+    mesh = jax.make_mesh((2, 4), ("pod", "data"))
+    ds = make_dataset("fashionmnist", n_train=800, n_test=100)
+    sizes = np.full(16, 40)                     # 16 users over 8 devices
+    x_u, y_u, mask, sizes = partition_to_users(ds.x_train, ds.y_train, sizes)
+    cfg = cnn.PAPER_CNNS["fashionmnist"]
+    w0 = cnn.init_params(cfg, jax.random.PRNGKey(0))
+    assign = np.arange(16) % 4
+    onehot = jax.nn.one_hot(jnp.asarray(assign), 4, dtype=jnp.float32)
+    hcfg = HflConfig(L=1, K=2, I=1, lr=0.1)
+    part = jnp.ones(16, jnp.float32)
+    szs = jnp.asarray(sizes, jnp.float32)
+
+    # distributed result
+    step = make_distributed_global_iteration(mesh, cfg, hcfg, M=4,
+                                             multi_pod=True)
+    xs, ys, ms, ss, oh = shard_clients(mesh, True, x_u, y_u, mask,
+                                       szs, onehot)
+    w_dist = step(w0, xs, ys, ms, ss, oh, part)
+
+    # single-device reference (same math, vmapped)
+    w_ref = global_iteration(cfg, hcfg, w0, jnp.asarray(x_u),
+                             jnp.asarray(y_u), jnp.asarray(mask), szs,
+                             onehot, part)
+
+    errs = [float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree.leaves(w_dist), jax.tree.leaves(w_ref))]
+    print(json.dumps({"n_devices": jax.device_count(),
+                      "max_err": max(errs)}))
+""")
+
+
+def test_distributed_hfl_matches_reference():
+    res = subprocess.run([sys.executable, "-c", SCRIPT],
+                         capture_output=True, text=True, timeout=900,
+                         env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
+                              "HOME": "/root"})
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out["n_devices"] == 8
+    assert out["max_err"] < 2e-5, out

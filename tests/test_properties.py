@@ -1,0 +1,87 @@
+"""Property-based tests (hypothesis) on system-level invariants."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sroa, system_model, wireless
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 24),
+       m=st.integers(2, 5))
+def test_sroa_always_feasible_and_constrained(seed, n, m):
+    """For any drawn scenario, SROA returns a feasible, box-constrained
+    allocation whose evaluated objective is finite."""
+    spec = dataclasses.replace(wireless.ScenarioSpec(), N=n, M=m)
+    scn = wireless.draw_scenario(seed, spec)
+    assign = wireless.nearest_edge_assignment(scn)
+    res = sroa.solve(scn, assign, 1.0)
+    assert bool(res.feasible)
+    assert float(res.b_sum) <= float(scn.B_total) * 1.01
+    assert bool(jnp.all((res.f >= 0) & (res.f <= scn.f_max * 1.001)))
+    assert bool(jnp.all((res.p >= 0) & (res.p <= scn.p_max * 1.001)))
+    cb = system_model.evaluate(scn, assign, res.b, res.f, res.p, 1.0)
+    assert np.isfinite(float(cb.R))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_objective_scale_invariance_in_lambda(seed):
+    """R(lambda) = E + lambda*T is linear in lambda for a FIXED allocation."""
+    scn = wireless.draw_scenario(seed)
+    assign = wireless.nearest_edge_assignment(scn)
+    b = jnp.full((scn.N,), scn.B_total / scn.N)
+    cb1 = system_model.evaluate(scn, assign, b, scn.f_max, scn.p_max, 1.0)
+    cb2 = system_model.evaluate(scn, assign, b, scn.f_max, scn.p_max, 2.0)
+    np.testing.assert_allclose(float(cb2.R - cb1.R), float(cb1.T_sum),
+                               rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), scale=st.floats(1.5, 4.0))
+def test_more_bandwidth_never_hurts(seed, scale):
+    """Monotonicity: scaling the total bandwidth budget up cannot raise
+    SROA's achieved objective."""
+    scn = wireless.draw_scenario(seed)
+    assign = wireless.nearest_edge_assignment(scn)
+    r1 = sroa.solve(scn, assign, 1.0)
+    scn2 = scn._replace(B_edges=scn.B_edges * scale)
+    r2 = sroa.solve(scn2, assign, 1.0)
+    cb1 = system_model.evaluate(scn, assign, r1.b, r1.f, r1.p, 1.0)
+    cb2 = system_model.evaluate(scn2, assign, r2.b, r2.f, r2.p, 1.0)
+    assert float(cb2.R) <= float(cb1.R) * 1.02
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_per_edge_bandwidth_consistency(seed):
+    """B*_m = sum_{n in N_m} b_n (paper: 'B_m obtained by sum b_n')."""
+    scn = wireless.draw_scenario(seed)
+    assign = wireless.nearest_edge_assignment(scn)
+    res = sroa.solve(scn, assign, 1.0)
+    cb = system_model.evaluate(scn, assign, res.b, res.f, res.p, 1.0)
+    a = np.asarray(assign)
+    manual = np.array([np.asarray(res.b)[a == m].sum()
+                       for m in range(scn.M)])
+    np.testing.assert_allclose(np.asarray(cb.b_per_edge), manual, rtol=1e-5)
+
+
+def test_hfl_aggregation_weight_invariance():
+    """Scaling all dataset sizes leaves the aggregated model unchanged."""
+    import jax
+    from repro.fed.hfl import cloud_average, weighted_edge_average
+    key = jax.random.PRNGKey(0)
+    user_params = {"w": jax.random.normal(key, (10, 4))}
+    onehot = jax.nn.one_hot(jnp.arange(10) % 3, 3, dtype=jnp.float32)
+    w1 = jnp.arange(1.0, 11.0)
+    e1, _ = weighted_edge_average(user_params, onehot, w1)
+    e2, _ = weighted_edge_average(user_params, onehot, w1 * 7.0)
+    np.testing.assert_allclose(np.asarray(e1["w"]), np.asarray(e2["w"]),
+                               rtol=1e-5)
+    c1 = cloud_average(e1, jnp.einsum("n,nm->m", w1, onehot))
+    c2 = cloud_average(e2, jnp.einsum("n,nm->m", w1 * 7.0, onehot))
+    np.testing.assert_allclose(np.asarray(c1["w"]), np.asarray(c2["w"]),
+                               rtol=1e-5)
