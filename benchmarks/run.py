@@ -7,22 +7,44 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig6  — TSIA convergence vs N, M                 [bench_convergence]
   fig7/8 — HFL vs FL accuracy + objective          [bench_hfl_vs_fl]
   roofline — per-cell terms from the dry-run       [roofline]
+  fleet — batched vs looped SROA + batched TSIA    [bench_fleet]
+
+``--json PATH`` additionally writes every row as structured JSON so future
+changes get a machine-readable perf trajectory to diff against.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
+import time
 import traceback
+
+# Make `python benchmarks/run.py` work from any cwd without PYTHONPATH:
+# the suite modules import as `benchmarks.*` and the package as `repro.*`.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+
+def _parse_row(suite: str, line: str) -> dict:
+    name, us, derived = line.split(",", 2)
+    return {"suite": suite, "name": name, "us_per_call": float(us),
+            "derived": derived}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: sroa,lambda,tsia,convergence,"
-                         "hfl_vs_fl,roofline")
+                         "hfl_vs_fl,roofline,fleet")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as JSON to PATH")
     args = ap.parse_args()
-    from benchmarks import (bench_convergence, bench_hfl_vs_fl, bench_lambda,
-                            bench_sroa, bench_tsia, roofline)
+    from benchmarks import (bench_convergence, bench_fleet, bench_hfl_vs_fl,
+                            bench_lambda, bench_sroa, bench_tsia, roofline)
     suites = {
         "sroa": bench_sroa.run,
         "lambda": bench_lambda.run,
@@ -30,18 +52,45 @@ def main() -> None:
         "convergence": bench_convergence.run,
         "hfl_vs_fl": bench_hfl_vs_fl.run,
         "roofline": roofline.run,
+        "fleet": bench_fleet.run,
     }
     wanted = args.only.split(",") if args.only else list(suites)
+    unknown = [w for w in wanted if w not in suites]
+    if unknown:
+        ap.error(f"unknown suite(s) {unknown}; choose from "
+                 f"{sorted(suites)}")
+    if args.json:
+        try:
+            with open(args.json, "w"):  # fail on an unwritable path now,
+                pass                    # not after a long benchmark run
+        except OSError as e:
+            ap.error(f"--json {args.json}: {e}")
     print("name,us_per_call,derived")
     failed = False
+    records = []
     for name in wanted:
         try:
             for line in suites[name]():
                 print(line, flush=True)
+                records.append(_parse_row(name, line))
         except Exception:   # noqa: BLE001 — report and continue
             failed = True
             print(f"{name},0.0,SUITE-ERROR", flush=True)
+            records.append({"suite": name, "name": name, "us_per_call": 0.0,
+                            "derived": "SUITE-ERROR"})
             traceback.print_exc(file=sys.stderr)
+    if args.json:
+        import jax
+        payload = {
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+            "backend": jax.default_backend(),
+            "suites": wanted,
+            "ok": not failed,
+            "rows": records,
+        }
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"# wrote {len(records)} rows to {args.json}", file=sys.stderr)
     if failed:
         sys.exit(1)
 

@@ -23,6 +23,7 @@ against :func:`invert_rate` (the pure-jnp oracle) in tests.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from functools import partial
 from typing import NamedTuple
 
@@ -92,10 +93,41 @@ def invert_rate(G: jnp.ndarray, target: jnp.ndarray, b_max,
     return jnp.where(feas, hi, b_max)
 
 
+@functools.lru_cache(maxsize=None)
+def _pallas_invert(iters: int):
+    """Pallas inversion with a batching rule that fills the kernel tiles.
+
+    Unbatched, this is the plain (N,) kernel call.  Under `jax.vmap` (the
+    fleet path: B scenarios x N users) the custom rule flattens the whole
+    (B, N) batch into one kernel launch so small per-cell user counts pack
+    full (8 x 128) VPU tiles instead of padding each cell separately.
+    """
+    from jax.custom_batching import custom_vmap
+
+    from repro.kernels import ops as kops
+
+    @custom_vmap
+    def inv(G, target, b_max):
+        return kops.sroa_invert_rate(G, target, b_max, iters=iters)
+
+    @inv.def_vmap
+    def _rule(axis_size, in_batched, G, target, b_max):  # noqa: ANN001
+        g_b, t_b, bm_b = in_batched
+        if not g_b:
+            G = jnp.broadcast_to(G, (axis_size,) + G.shape)
+        if not t_b:
+            target = jnp.broadcast_to(target, (axis_size,) + target.shape)
+        bm = b_max if bm_b else jnp.broadcast_to(b_max, (axis_size,))
+        out = kops.sroa_invert_rate_batched(G, target, bm, iters=iters)
+        return out, True
+
+    return inv
+
+
 def _invert_rate_dispatch(G, target, b_max, iters, use_pallas: bool):
     if use_pallas:
-        from repro.kernels import ops as kops
-        return kops.sroa_invert_rate(G, target, b_max, iters=iters)
+        return _pallas_invert(iters)(G, target, jnp.asarray(b_max,
+                                                            jnp.float32))
     return invert_rate(G, target, b_max, iters=iters)
 
 
@@ -215,8 +247,11 @@ def _auto_bounds(consts: SroaConstants, B, f_max, p_max, N0, lam,
     hi = jnp.asarray(cfg.t_up, jnp.float32)
     _, t_min = lax.fori_loop(0, cfg.t_iters, body, (lo, hi))
 
-    # Equal-split delay (no optimization at all).
-    b_eq = jnp.broadcast_to(B / consts.h.shape[0], consts.h.shape)
+    # Equal-split delay (no optimization at all).  The head count must be
+    # the number of *real* users (H > 0) so a padded fleet cell follows the
+    # same t-grid as its standalone solve (see fleet/batch.py).
+    n_eff = jnp.maximum(jnp.sum((consts.H > 0).astype(jnp.float32)), 1.0)
+    b_eq = jnp.broadcast_to(B / n_eff, consts.h.shape)
     T_com = consts.H / jnp.maximum(rate_fn(b_eq, G), 1e-30)
     t_naive = jnp.max(T_com + consts.J / f_max + consts.delta)
     t_lo = 0.95 * t_min

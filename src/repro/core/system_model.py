@@ -48,7 +48,8 @@ def members(assign: jnp.ndarray, M: int) -> jnp.ndarray:
 
 
 def evaluate(scn: Scenario, assign: jnp.ndarray, b: jnp.ndarray,
-             f: jnp.ndarray, p: jnp.ndarray, lam) -> CostBreakdown:
+             f: jnp.ndarray, p: jnp.ndarray, lam,
+             mask: jnp.ndarray | None = None) -> CostBreakdown:
     """Evaluate the full paper cost model for one configuration.
 
     Args:
@@ -58,8 +59,12 @@ def evaluate(scn: Scenario, assign: jnp.ndarray, b: jnp.ndarray,
       f:      (N,) Hz CPU frequency per user.
       p:      (N,) W  transmit power per user.
       lam:    importance weight lambda in eq (15).
+      mask:   optional (N,) bool; False = inactive/padded user, excluded
+              from every aggregate (delays, energies, edge occupancy).
     """
     psi = members(assign, scn.M)                       # (N, M)
+    if mask is not None:
+        psi = psi * mask.astype(psi.dtype)[:, None]
     gain_n = jnp.sum(psi * scn.gain, axis=1)           # h_n: gain to own edge
 
     f_safe = jnp.maximum(f, 1.0)
@@ -105,23 +110,63 @@ class SroaConstants(NamedTuple):
 
     A: jnp.ndarray       # (N,)  A_n = (alpha/2) I K L c_n D_n
     J: jnp.ndarray       # (N,)  J_n = I K L c_n D_n
-    H: jnp.ndarray       # ()    H_n = I K s   (same for all users)
+    H: jnp.ndarray       # (N,)  H_n = I K s   (uniform unless masked)
     delta: jnp.ndarray   # (N,)  delta_n = I * T_cloud of own edge
     h: jnp.ndarray       # (N,)  channel gain to own edge
     E_cloud_total: jnp.ndarray  # () I * sum_m E_cloud (the omitted constant)
 
 
-def sroa_constants(scn: Scenario, assign: jnp.ndarray) -> SroaConstants:
+def sroa_constants(scn: Scenario, assign: jnp.ndarray,
+                   mask: jnp.ndarray | None = None) -> SroaConstants:
     psi = members(assign, scn.M)
+    if mask is not None:
+        psi = psi * mask.astype(psi.dtype)[:, None]
     IKL = scn.I * scn.K * scn.L
     occupied = psi.sum(axis=0) > 0
     T_cloud = jnp.where(occupied, scn.T_cloud(), 0.0)
     E_cloud = jnp.where(occupied, scn.E_cloud(), 0.0)
-    return SroaConstants(
+    consts = SroaConstants(
         A=0.5 * scn.alpha * IKL * scn.c * scn.D,
         J=IKL * scn.c * scn.D,
-        H=scn.I * scn.K * scn.s_bits,
+        H=jnp.broadcast_to(scn.I * scn.K * scn.s_bits, scn.c.shape),
         delta=scn.I * jnp.sum(psi * T_cloud[None, :], axis=1),
         h=jnp.sum(psi * scn.gain, axis=1),
         E_cloud_total=scn.I * jnp.sum(E_cloud),
     )
+    if mask is not None:
+        consts = mask_constants(consts, mask)
+    return consts
+
+
+def sroa_constants_batched(scn: Scenario, assigns: jnp.ndarray,
+                           mask: jnp.ndarray | None = None) -> SroaConstants:
+    """Stacked constants for a batch of candidate assignments.
+
+    Args:
+      scn:     one wireless scenario.
+      assigns: (A, N) int32 — A candidate user->edge assignment patterns.
+      mask:    optional (N,) bool shared by all candidates.
+    Returns:
+      SroaConstants whose per-user leaves have a leading candidate axis
+      (A, N) and whose scalar leaf (E_cloud_total) has shape (A,); feed it
+      to :func:`repro.fleet.batch.solve_constants_batch` to score all A
+      patterns in one XLA call.
+    """
+    fn = lambda a: sroa_constants(scn, a, mask)        # noqa: E731
+    return jax.vmap(fn)(assigns)
+
+
+def mask_constants(consts: SroaConstants, mask: jnp.ndarray) -> SroaConstants:
+    """Neutralize padded users so they contribute ~nothing to a solve.
+
+    ``mask`` broadcasts against the per-user leaves (True = real user).  A
+    masked user gets A = J = H = delta = 0: its rate target collapses to 0,
+    the bandwidth bisection drives its b to ~b_max * 2**-iters (measure
+    zero against any budget), and both its energy terms vanish.  The gain
+    is pinned to 1 to keep every divide well-conditioned.
+    """
+    m = mask.astype(bool)
+    zero = lambda x: jnp.where(m, x, 0.0)
+    return consts._replace(
+        A=zero(consts.A), J=zero(consts.J), H=zero(consts.H),
+        delta=zero(consts.delta), h=jnp.where(m, consts.h, 1.0))

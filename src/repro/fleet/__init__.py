@@ -1,0 +1,17 @@
+"""Fleet-scale planning engine on top of the paper's core algorithms.
+
+* :mod:`repro.fleet.batch`       — stacked scenarios + one-call batched SROA.
+* :mod:`repro.fleet.dynamics`    — mobility / fading / churn scenario streams.
+* :mod:`repro.fleet.incremental` — batched TSIA and warm-start re-planning.
+* :mod:`repro.fleet.planner`     — the cached :class:`FleetPlanner` facade.
+"""
+from repro.fleet.batch import (FleetScenario, draw_fleet, fleet_assignments,
+                               fleet_constants, solve_batch, solve_candidates,
+                               stack_scenarios)
+from repro.fleet.planner import FleetPlanner, PlanResult, scenario_digest
+
+__all__ = [
+    "FleetScenario", "draw_fleet", "fleet_assignments", "fleet_constants",
+    "solve_batch", "solve_candidates", "stack_scenarios",
+    "FleetPlanner", "PlanResult", "scenario_digest",
+]

@@ -1,0 +1,190 @@
+"""Time-varying scenario streams: mobility, block fading, user churn.
+
+The planner's re-planning loop consumes these three event generators, each
+a pure function ``(scenario, state, rng) -> (scenario', state', ...)``:
+
+* :func:`mobility_step` — Gauss-Markov user movement (velocity with memory
+  ``v' = a v + sigma sqrt(1-a^2) w``), positions reflected at the square's
+  walls, channel gains recomputed from the new distances with the cell's
+  *persistent* shadowing (recovered from the drawn scenario, so step 0 is
+  exactly the seed draw).
+* :func:`fading_step` — block-fading redraw of the log-normal shadowing on
+  the user->edge links (coherence-time boundary), positions unchanged.
+* :func:`churn_step` — Poisson arrivals / exponential departures over a
+  fixed slot pool: departing users free their slot (mask -> False),
+  arrivals claim a free slot with freshly drawn position / compute
+  constants / channel.  Shapes never change, so jitted solvers never
+  recompile; the activity mask rides with
+  :func:`repro.core.system_model.mask_constants`.
+
+All randomness comes from an explicit ``numpy.random.Generator`` (scenario
+generation has always been host-side numpy, see ``wireless.draw_scenario``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.wireless import Scenario, ScenarioSpec, path_loss_db
+
+
+class DynamicsState(NamedTuple):
+    """Host-side latent state the Scenario pytree does not carry."""
+
+    velocity: np.ndarray      # (N, 2) m/s Gauss-Markov velocities
+    shadow_ue_db: np.ndarray  # (N, M) log-normal shadowing user -> edge
+    active: np.ndarray        # (N,) bool — slot currently holds a live user
+    t: float                  # simulation clock (s)
+
+
+class ChurnEvents(NamedTuple):
+    departed: np.ndarray      # slot indices freed this step
+    arrived: np.ndarray       # slot indices (re)occupied this step
+    dropped: int              # arrivals lost because every slot was busy
+
+
+def recover_shadowing(scn: Scenario) -> np.ndarray:
+    """Back out the (N, M) shadowing draw from gains + geometry (dB)."""
+    d = np.linalg.norm(np.asarray(scn.user_pos)[:, None, :]
+                       - np.asarray(scn.edge_pos)[None, :, :], axis=-1)
+    pl_db = path_loss_db(d / 1000.0)
+    gain_db = 10.0 * np.log10(np.maximum(np.asarray(scn.gain, np.float64),
+                                         1e-300))
+    return -gain_db - pl_db
+
+
+def _gains(user_pos: np.ndarray, edge_pos: np.ndarray,
+           shadow_db: np.ndarray) -> np.ndarray:
+    d = np.linalg.norm(user_pos[:, None, :] - edge_pos[None, :, :], axis=-1)
+    return 10.0 ** (-(path_loss_db(d / 1000.0) + shadow_db) / 10.0)
+
+
+def init_state(scn: Scenario, seed: int = 0,
+               mean_speed: float = 1.5,
+               active: np.ndarray | None = None) -> DynamicsState:
+    """Initial dynamics state consistent with the drawn scenario."""
+    rng = np.random.default_rng(seed)
+    vel = rng.normal(0.0, mean_speed / np.sqrt(2.0), size=(scn.N, 2))
+    act = (np.ones(scn.N, bool) if active is None
+           else np.asarray(active, bool).copy())
+    return DynamicsState(velocity=vel, shadow_ue_db=recover_shadowing(scn),
+                         active=act, t=0.0)
+
+
+def mobility_step(scn: Scenario, state: DynamicsState,
+                  rng: np.random.Generator, dt: float = 1.0,
+                  mean_speed: float = 1.5, memory: float = 0.85,
+                  side_m: float = 500.0
+                  ) -> tuple[Scenario, DynamicsState]:
+    """One Gauss-Markov mobility step; gains follow the new geometry."""
+    sigma = mean_speed / np.sqrt(2.0)
+    noise = rng.normal(0.0, sigma, size=state.velocity.shape)
+    vel = memory * state.velocity + np.sqrt(1.0 - memory ** 2) * noise
+    raw = np.asarray(scn.user_pos, np.float64) + vel * dt
+    # Reflect at the walls (keeps users inside the paper's square); the
+    # crossing test must use the unfolded position — the folded one is
+    # already back inside, so it would never reverse the velocity.
+    pos = np.abs(raw)
+    pos = side_m - np.abs(side_m - pos)
+    vel = np.where((raw < 0.0) | (raw > side_m), -vel, vel)
+    gain = _gains(pos, np.asarray(scn.edge_pos), state.shadow_ue_db)
+    scn2 = scn._replace(user_pos=jnp.asarray(pos, jnp.float32),
+                        gain=jnp.asarray(gain, jnp.float32))
+    return scn2, state._replace(velocity=vel, t=state.t + dt)
+
+
+def fading_step(scn: Scenario, state: DynamicsState,
+                rng: np.random.Generator, std_db: float = 8.0
+                ) -> tuple[Scenario, DynamicsState]:
+    """Block-fading boundary: redraw the user->edge shadowing."""
+    shadow = rng.normal(0.0, std_db, size=state.shadow_ue_db.shape)
+    gain = _gains(np.asarray(scn.user_pos, np.float64),
+                  np.asarray(scn.edge_pos), shadow)
+    scn2 = scn._replace(gain=jnp.asarray(gain, jnp.float32))
+    return scn2, state._replace(shadow_ue_db=shadow)
+
+
+def churn_step(scn: Scenario, state: DynamicsState,
+               rng: np.random.Generator,
+               spec: ScenarioSpec | None = None, dt: float = 1.0,
+               arrival_rate: float = 1.0, departure_rate: float = 0.02,
+               side_m: float = 500.0, mean_speed: float = 1.5
+               ) -> tuple[Scenario, DynamicsState, ChurnEvents]:
+    """Poisson arrival / departure churn over the fixed slot pool.
+
+    ``departure_rate`` is the per-user hazard (each active user leaves this
+    step with probability 1 - exp(-rate * dt)); ``arrival_rate`` the
+    Poisson intensity of new users per unit time.  Arrivals beyond the
+    number of free slots are dropped and reported.
+    """
+    spec = spec or ScenarioSpec()
+    active = state.active.copy()
+    vel = state.velocity.copy()
+    shadow = state.shadow_ue_db.copy()
+    pos = np.asarray(scn.user_pos, np.float64).copy()
+    c = np.asarray(scn.c, np.float64).copy()
+    D = np.asarray(scn.D, np.float64).copy()
+
+    leave_p = 1.0 - np.exp(-departure_rate * dt)
+    departing = np.flatnonzero(active & (rng.uniform(size=active.shape)
+                                         < leave_p))
+    active[departing] = False
+
+    n_arr = int(rng.poisson(arrival_rate * dt))
+    free = np.flatnonzero(~active)
+    take = free[:n_arr]
+    dropped = max(0, n_arr - free.size)
+    for slot in take:
+        active[slot] = True
+        pos[slot] = rng.uniform(0.0, side_m, size=2)
+        c[slot] = rng.uniform(*spec.c_range)
+        D[slot] = rng.uniform(spec.D_range[0], spec.D_range[1])
+        shadow[slot] = rng.normal(0.0, spec.shadow_std_db, size=scn.M)
+        vel[slot] = rng.normal(0.0, mean_speed / np.sqrt(2.0), size=2)
+
+    gain = _gains(pos, np.asarray(scn.edge_pos), shadow)
+    scn2 = scn._replace(user_pos=jnp.asarray(pos, jnp.float32),
+                        gain=jnp.asarray(gain, jnp.float32),
+                        c=jnp.asarray(c, jnp.float32),
+                        D=jnp.asarray(D, jnp.float32))
+    state2 = DynamicsState(velocity=vel, shadow_ue_db=shadow, active=active,
+                           t=state.t + dt)
+    return scn2, state2, ChurnEvents(departed=departing, arrived=take,
+                                     dropped=dropped)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Cadence knobs for :func:`stream` (all rates per simulated second)."""
+
+    dt: float = 1.0
+    mean_speed: float = 1.5          # pedestrian
+    memory: float = 0.85             # Gauss-Markov alpha
+    fading_every: int = 5            # block length in steps
+    arrival_rate: float = 0.5
+    departure_rate: float = 0.01
+    side_m: float = 500.0
+
+
+def stream(scn: Scenario, seed: int = 0, steps: int = 10,
+           spec: ScenarioSpec | None = None,
+           cfg: StreamConfig = StreamConfig()
+           ) -> Iterator[tuple[Scenario, DynamicsState, ChurnEvents]]:
+    """Yield a coupled mobility + fading + churn scenario stream."""
+    rng = np.random.default_rng(seed)
+    state = init_state(scn, seed=seed, mean_speed=cfg.mean_speed)
+    for k in range(steps):
+        scn, state = mobility_step(scn, state, rng, dt=cfg.dt,
+                                   mean_speed=cfg.mean_speed,
+                                   memory=cfg.memory, side_m=cfg.side_m)
+        if cfg.fading_every and (k + 1) % cfg.fading_every == 0:
+            scn, state = fading_step(scn, state, rng)
+        scn, state, events = churn_step(
+            scn, state, rng, spec=spec, dt=cfg.dt,
+            arrival_rate=cfg.arrival_rate,
+            departure_rate=cfg.departure_rate, side_m=cfg.side_m,
+            mean_speed=cfg.mean_speed)
+        yield scn, state, events

@@ -1,0 +1,160 @@
+"""FleetPlanner facade: cached assignment + resource planning per cell.
+
+A serving front end for the fleet engine: callers hand it scenarios (or a
+whole :class:`~repro.fleet.batch.FleetScenario`) and get back complete
+plans (assignment + per-user b/f/p + objective).  Identical planning
+problems — same channel realization, same lambda — are served from an LRU
+cache keyed on a content digest of the scenario pytree, which is what makes
+the re-planning loop cheap between dynamics events: unchanged cells cost a
+hash, changed cells cost a warm-started batched-TSIA polish
+(:func:`repro.fleet.incremental.replan`).
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+from collections import OrderedDict
+from typing import NamedTuple
+
+import jax
+import numpy as np
+
+from repro.core import sroa
+from repro.core.wireless import Scenario
+from repro.fleet import batch as fbatch
+from repro.fleet import incremental
+
+
+def scenario_digest(scn: Scenario, lam, mask=None, extra: bytes = b"") -> str:
+    """Content hash of a planning problem (scenario + weight + mask)."""
+    h = hashlib.sha1()
+    for leaf in jax.tree.leaves(scn):
+        a = np.asarray(leaf)
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    h.update(np.float64(lam).tobytes())
+    if mask is not None:
+        h.update(np.asarray(mask, bool).tobytes())
+    h.update(extra)
+    return h.hexdigest()
+
+
+class PlanResult(NamedTuple):
+    assign: np.ndarray     # (N,) user -> edge
+    b: np.ndarray          # (N,) Hz
+    f: np.ndarray          # (N,) Hz
+    p: np.ndarray          # (N,) W
+    R: float               # objective (eq 15)
+    t: float               # SROA deadline t*
+    cached: bool           # served from the LRU cache
+    solve_calls: int       # batched device calls spent on this plan
+    plan_ms: float         # wall time spent planning (0.0 when cached)
+
+
+class FleetPlanner:
+    """Planning endpoint with an LRU solve cache.
+
+    Args:
+      lam:          objective weight lambda (eq 15).
+      cfg:          SROA config shared by every solve.
+      cache_size:   max retained plans (LRU eviction).
+      max_rounds:   batched-TSIA assigning-iteration budget per cold plan.
+      escape_iters: non-improving Algorithm-5 escapes allowed per plan.
+    """
+
+    def __init__(self, lam: float = 1.0,
+                 cfg: sroa.SroaConfig = sroa.SroaConfig(),
+                 cache_size: int = 256, max_rounds: int = 48,
+                 escape_iters: int = 6):
+        self.lam = float(lam)
+        self.cfg = cfg
+        self.cache_size = cache_size
+        self.max_rounds = max_rounds
+        self.escape_iters = escape_iters
+        self._cache: OrderedDict[str, PlanResult] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    # ------------------------------------------------------------- caching
+    def _lookup(self, key: str) -> PlanResult | None:
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._cache.move_to_end(key)
+            self.hits += 1
+            return hit._replace(cached=True, plan_ms=0.0)
+        self.misses += 1
+        return None
+
+    def _insert(self, key: str, plan: PlanResult) -> None:
+        self._cache[key] = plan
+        while len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+
+    @property
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {"hits": self.hits, "misses": self.misses,
+                "size": len(self._cache),
+                "hit_rate": self.hits / total if total else 0.0}
+
+    # ------------------------------------------------------------ planning
+    def plan(self, scn: Scenario, warm_assign: np.ndarray | None = None,
+             new_users: np.ndarray | None = None,
+             mask: np.ndarray | None = None) -> PlanResult:
+        """Plan one cell: cache lookup, else (warm-started) batched TSIA."""
+        if mask is not None and np.all(mask):
+            mask = None                  # all-active == unmasked plan
+        key = scenario_digest(scn, self.lam, mask)
+        hit = self._lookup(key)
+        if hit is not None:
+            return hit
+        t0 = time.perf_counter()
+        if warm_assign is not None:
+            res = incremental.replan(scn, warm_assign, self.lam, self.cfg,
+                                     new_users=new_users, mask=mask,
+                                     max_rounds=self.max_rounds,
+                                     escape_iters=self.escape_iters)
+        else:
+            res = incremental.solve(scn, self.lam, self.cfg,
+                                    max_rounds=self.max_rounds,
+                                    escape_iters=self.escape_iters,
+                                    mask=mask)
+        plan = PlanResult(
+            assign=np.asarray(res.assign), b=np.asarray(res.sroa.b),
+            f=np.asarray(res.sroa.f), p=np.asarray(res.sroa.p),
+            R=float(res.R), t=float(res.sroa.t), cached=False,
+            solve_calls=res.history.solve_calls,
+            plan_ms=(time.perf_counter() - t0) * 1e3)
+        self._insert(key, plan)
+        return plan
+
+    def allocate(self, scn: Scenario, assign: np.ndarray) -> PlanResult:
+        """Resource allocation only (fixed assignment), cached."""
+        a = np.asarray(assign, np.int32)
+        key = scenario_digest(scn, self.lam, extra=a.tobytes())
+        hit = self._lookup(key)
+        if hit is not None:
+            return hit
+        t0 = time.perf_counter()
+        res = sroa.solve(scn, a, self.lam, self.cfg)
+        plan = PlanResult(assign=a, b=np.asarray(res.b),
+                          f=np.asarray(res.f), p=np.asarray(res.p),
+                          R=float(res.R), t=float(res.t), cached=False,
+                          solve_calls=1,
+                          plan_ms=(time.perf_counter() - t0) * 1e3)
+        self._insert(key, plan)
+        return plan
+
+    def plan_fleet(self, fleet: fbatch.FleetScenario,
+                   warm: list | None = None) -> list[PlanResult]:
+        """Plan every cell of a fleet (per-cell cache + warm starts)."""
+        warm = warm or [None] * fleet.C
+        return [self.plan(fleet.cell(i),
+                          warm_assign=None if warm[i] is None
+                          else warm[i].assign)
+                for i in range(fleet.C)]
+
+    def allocate_fleet(self, fleet: fbatch.FleetScenario,
+                       assigns=None) -> sroa.SroaResult:
+        """Fast path: batched SROA for the whole fleet in one XLA call."""
+        return fbatch.solve_batch(fleet, assigns, self.lam, self.cfg)

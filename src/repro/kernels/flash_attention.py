@@ -37,9 +37,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int,
 
     def body(kb, carry):
         acc, m, denom = carry
-        k = pl.load(k_ref, (0, pl.dslice(kb * block_k, block_k),
+        # The leading block index must be a shaped scalar: interpret mode's
+        # load discharge rule rejects raw Python ints.
+        zero = jnp.asarray(0, jnp.int32)
+        k = pl.load(k_ref, (zero, pl.dslice(kb * block_k, block_k),
                             slice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.dslice(kb * block_k, block_k),
+        v = pl.load(v_ref, (zero, pl.dslice(kb * block_k, block_k),
                             slice(None))).astype(jnp.float32)
         s = q @ k.T                            # (block_q, block_k)
         k_pos = kb * block_k + jax.lax.iota(jnp.int32, block_k)

@@ -30,6 +30,24 @@ def sroa_invert_rate(G, target, b_max, iters: int = 42,
                                   interpret=interpret)
 
 
+@partial(jax.jit, static_argnames=("iters", "interpret"))
+def sroa_invert_rate_batched(G, target, b_max, iters: int = 42,
+                             interpret: bool | None = None):
+    """Fleet-batched inversion: G, target (B, N); b_max (B,) or scalar.
+
+    Flattens the batch so one kernel launch processes B*N users in full
+    (8 x 128) tiles — this is the path `repro.fleet.batch.solve_batch`
+    routes through when ``SroaConfig.use_pallas`` is set.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    shape = G.shape
+    bm = jnp.broadcast_to(jnp.asarray(b_max, jnp.float32)[..., None], shape)
+    out = _sb.sroa_bisect_pallas_vec(G.reshape(-1), target.reshape(-1),
+                                     bm.reshape(-1), iters=iters,
+                                     interpret=interpret)
+    return out.reshape(shape)
+
+
 @partial(jax.jit,
          static_argnames=("causal", "q_offset", "window", "interpret"))
 def flash_attention(q, k, v, *, causal=True, q_offset=0, window=None,

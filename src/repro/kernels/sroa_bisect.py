@@ -79,3 +79,56 @@ def sroa_bisect_pallas(G: jnp.ndarray, target: jnp.ndarray, b_max,
         interpret=interpret,
     )(G2, T2, bm)
     return out.reshape(-1)[:N]
+
+
+def _bisect_kernel_vec(g_ref, t_ref, b_ref, o_ref, *, iters: int):
+    """Per-element b_max variant: all three operands are full VPU blocks."""
+    G = g_ref[...]
+    tgt = t_ref[...]
+    bm = b_ref[...]
+    lo = jnp.zeros_like(G)
+    hi = bm
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        ok = _rate(mid, G) >= tgt
+        return jnp.where(ok, lo, mid), jnp.where(ok, mid, hi)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    feas = _rate(bm, G) >= tgt
+    o_ref[...] = jnp.where(feas, hi, bm)
+
+
+def sroa_bisect_pallas_vec(G: jnp.ndarray, target: jnp.ndarray,
+                           b_max: jnp.ndarray, iters: int = 42, *,
+                           block_rows: int = ROWS,
+                           interpret: bool = True) -> jnp.ndarray:
+    """Fleet-batched inversion: per-element bandwidth caps.
+
+    G, target, b_max: (N,) float32 where N is typically a flattened
+    batch x users axis — a fleet of scenarios (each with its own budget,
+    hence the vector b_max) packed so one call fills whole (8 x 128)
+    tiles instead of padding each small cell up to a tile on its own.
+    """
+    N = G.shape[0]
+    tile = block_rows * LANES
+    n_pad = (-N) % tile
+    Gp = jnp.pad(G.astype(jnp.float32), (0, n_pad), constant_values=1.0)
+    Tp = jnp.pad(target.astype(jnp.float32), (0, n_pad),
+                 constant_values=0.0)
+    Bp = jnp.pad(b_max.astype(jnp.float32), (0, n_pad),
+                 constant_values=1.0)
+    rows = (N + n_pad) // LANES
+    spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+
+    out = pl.pallas_call(
+        functools.partial(_bisect_kernel_vec, iters=iters),
+        grid=(rows // block_rows,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=interpret,
+    )(Gp.reshape(rows, LANES), Tp.reshape(rows, LANES),
+      Bp.reshape(rows, LANES))
+    return out.reshape(-1)[:N]

@@ -1,36 +1,140 @@
-"""Batched LM serving driver: prefill + decode with a KV/state cache.
+"""Batched serving drivers: LM decode and fleet planning.
 
-Demonstrates the serve path end-to-end on CPU with a reduced config of any
-assigned arch (the full configs are exercised by the dry-run):
+``--mode lm`` (default) demonstrates the LM serve path end-to-end on CPU
+with a reduced config of any assigned arch (the full configs are exercised
+by the dry-run):
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
       --batch 4 --prompt-len 32 --new-tokens 16
+
+``--mode plan`` serves the fleet planning endpoint: it draws a
+heterogeneous fleet, plans every cell through the cached
+:class:`repro.fleet.planner.FleetPlanner`, then replays ``--rounds`` of
+scenario dynamics (mobility / fading / churn) with warm-started
+re-planning — unchanged cells are LRU cache hits:
+
+  PYTHONPATH=src python -m repro.launch.serve --mode plan \
+      --cells 8 --rounds 3 --cell-users 12 --cell-edges 3
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
-from repro.models import transformer as tf
+
+def plan_request(planner, scn, warm_assign=None, new_users=None,
+                 mask=None) -> dict:
+    """One planning request -> JSON-able response (the endpoint contract)."""
+    plan = planner.plan(scn, warm_assign=warm_assign, new_users=new_users,
+                        mask=mask)
+    return {
+        "assign": plan.assign.tolist(),
+        "b_hz": plan.b.tolist(),
+        "f_hz": plan.f.tolist(),
+        "p_w": plan.p.tolist(),
+        "objective": plan.R,
+        "deadline_s": plan.t,
+        "cached": plan.cached,
+        "solve_calls": plan.solve_calls,
+        "plan_ms": plan.plan_ms,
+    }
+
+
+def run_planner(args) -> dict:
+    """The ``--mode plan`` driver: fleet bring-up + dynamic re-planning."""
+    from repro.core import sroa
+    from repro.core.wireless import ScenarioSpec
+    from repro.fleet import FleetPlanner, draw_fleet
+    from repro.fleet import dynamics
+
+    spec = dataclasses.replace(ScenarioSpec(), N=args.cell_users,
+                               M=args.cell_edges)
+    n_lo = min(max(4, args.cell_users // 2), args.cell_users)
+    fleet = draw_fleet(args.seed, args.cells, spec,
+                       n_range=(n_lo, args.cell_users))
+    cfg = sroa.SroaConfig(b_iters=30, f_iters=24, p_iters=20, t_iters=28)
+    planner = FleetPlanner(lam=args.lam, cfg=cfg,
+                           max_rounds=args.plan_rounds, escape_iters=2)
+
+    print(f"[plan] fleet: {fleet.C} cells, N_max={fleet.N_max}, "
+          f"M={fleet.M}")
+    t0 = time.time()
+    plans = planner.plan_fleet(fleet)
+    total_R = sum(p.R for p in plans)
+    print(f"[plan] cold round: sum R={total_R:.1f} in {time.time()-t0:.2f}s "
+          f"({sum(p.solve_calls for p in plans)} batched solves)")
+
+    cells = [fleet.cell(i) for i in range(fleet.C)]
+    states = [dynamics.init_state(c, seed=args.seed + i)
+              for i, c in enumerate(cells)]
+    warm = [p.assign for p in plans]
+    rng = np.random.default_rng(args.seed)
+    for rnd in range(args.rounds):
+        # A random subset of cells sees a dynamics event; the rest are
+        # unchanged and must come back as cache hits.
+        moved = rng.uniform(size=fleet.C) < args.event_rate
+        events = [None] * fleet.C
+        for i in np.flatnonzero(moved):
+            cells[i], states[i] = dynamics.mobility_step(
+                cells[i], states[i], rng)
+            cells[i], states[i], events[i] = dynamics.churn_step(
+                cells[i], states[i], rng, spec)
+        t0 = time.time()
+        responses = [
+            plan_request(planner, cells[i],
+                         warm_assign=warm[i],
+                         new_users=None if events[i] is None
+                         else events[i].arrived,
+                         mask=states[i].active)
+            for i in range(fleet.C)
+        ]
+        # Each round's assignments seed the next round's warm starts.
+        warm = [np.asarray(r["assign"], np.int32) for r in responses]
+        dt = time.time() - t0
+        hits = sum(r["cached"] for r in responses)
+        total_R = sum(r["objective"] for r in responses)
+        print(f"[plan] round {rnd}: {int(moved.sum())} cells changed, "
+              f"{hits}/{fleet.C} cache hits, sum R={total_R:.1f}, "
+              f"{dt*1e3:.0f}ms")
+    print(f"[plan] cache stats: {planner.stats}")
+    return {"sum_R": total_R, "stats": planner.stats}
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen1.5-0.5b",
-                    choices=list(configs.ARCHS))
+    ap.add_argument("--mode", default="lm", choices=("lm", "plan"))
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full-size", action="store_true",
                     help="use the full config (TPU-scale; default reduced)")
+    # planning endpoint knobs
+    ap.add_argument("--cells", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--cell-users", type=int, default=12)
+    ap.add_argument("--cell-edges", type=int, default=3)
+    ap.add_argument("--lam", type=float, default=1.0)
+    ap.add_argument("--plan-rounds", type=int, default=12,
+                    help="batched-TSIA iteration budget per cold plan")
+    ap.add_argument("--event-rate", type=float, default=0.4,
+                    help="per-round probability a cell sees dynamics")
     args = ap.parse_args(argv)
 
+    if args.mode == "plan":
+        return run_planner(args)
+
+    from repro import configs
+    from repro.models import transformer as tf
+
+    if args.arch not in configs.ARCHS:
+        raise SystemExit(f"unknown arch {args.arch!r}")
     cfg = configs.get(args.arch)
     if not cfg.has_decode:
         raise SystemExit(f"{args.arch} is encoder-only (no decode)")
