@@ -1,0 +1,130 @@
+"""Device-resident assignment engine vs the host-driven loops.
+
+Validates the engine-level claims of the device-resident refactor:
+  * one cell's ENTIRE assignment search costs ONE host->device solve call
+    (`repro.fleet.engine.solve_assignment`) — >= 5x fewer host calls per
+    cell than PR 1's batched TSIA (`incremental.solve_host`, one call per
+    assigning iteration) and far fewer than the seed TSIA (one call per
+    visited pattern);
+  * the engine's best objective is never worse than either host path;
+  * `solve_fleet_assignments` amortizes a whole fleet's searches into one
+    jitted call and beats the per-cell host loop in wall clock.
+
+Round-trip accounting is also tabulated in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import sroa, tsia, wireless
+from repro.fleet import batch as fbatch
+from repro.fleet import engine as fengine
+from repro.fleet import incremental
+
+N_USERS = 16
+M_EDGES = 3
+C_CELLS = 8
+LAM = 1.0
+# Trimmed caps (matching the test configs) keep the CPU run affordable;
+# every compared path shares them, so ratios are apples-to-apples.
+CFG = sroa.SroaConfig(b_iters=30, f_iters=24, p_iters=20, t_iters=28)
+MAX_ROUNDS = 24
+ESCAPES = 4
+
+
+def run(quiet: bool = False):
+    rows = []
+    spec = dataclasses.replace(wireless.ScenarioSpec(), N=N_USERS,
+                               M=M_EDGES)
+    scn = wireless.draw_scenario(0, spec)
+
+    # --- seed TSIA: one host solve call per visited pattern ---------------
+    t0 = time.perf_counter()
+    seed_res = tsia.solve(scn, LAM, CFG)
+    us_seed = (time.perf_counter() - t0) * 1e6
+    seed_calls = len(seed_res.history.R_trace)
+    rows.append(row("engine/seed_tsia", us_seed,
+                    f"R={seed_res.R:.1f};host_calls={seed_calls}"))
+
+    # --- PR 1 batched TSIA: one host solve call per assigning iteration ---
+    t0 = time.perf_counter()
+    host = incremental.solve_host(scn, LAM, CFG, max_rounds=MAX_ROUNDS,
+                                  escape_iters=ESCAPES)
+    us_host = (time.perf_counter() - t0) * 1e6
+    host_calls = host.history.solve_calls
+    rows.append(row("engine/host_batched", us_host,
+                    f"R={host.R:.1f};host_calls={host_calls}"))
+
+    # --- device-resident engine: ONE host solve call for the search ------
+    ours = incremental.solve(scn, LAM, CFG, max_rounds=MAX_ROUNDS,
+                             escape_iters=ESCAPES)     # warm the jit
+    t0 = time.perf_counter()
+    ours = incremental.solve(scn, LAM, CFG, max_rounds=MAX_ROUNDS,
+                             escape_iters=ESCAPES)
+    us_eng = (time.perf_counter() - t0) * 1e6
+    h = ours.history
+    rows.append(row("engine/device", us_eng,
+                    f"R={ours.R:.1f};host_calls={h.solve_calls};"
+                    f"rounds={h.rounds};cands={h.candidates_evaluated}"))
+
+    ratio_host = host_calls / h.solve_calls
+    ratio_seed = seed_calls / h.solve_calls
+    rows.append(row("engine/host_calls_per_cell", 0.0,
+                    f"seed={seed_calls};batched={host_calls};engine="
+                    f"{h.solve_calls};ratio_vs_batched={ratio_host:.0f}x;"
+                    f"ratio_vs_seed={ratio_seed:.0f}x"))
+    if not quiet:
+        assert h.solve_calls == 1, h.solve_calls
+        assert ratio_host >= 5.0, (
+            f"engine host-call reduction {ratio_host:.1f}x < 5x")
+        assert ours.R <= seed_res.R * (1 + 1e-6), (ours.R, seed_res.R)
+        assert ours.R <= host.R * (1 + 1e-6), (ours.R, host.R)
+
+    # --- fleet-wide: C cells' full searches in ONE jitted call ------------
+    fleet = fbatch.draw_fleet(0, C_CELLS, spec, n_range=(8, N_USERS))
+    fl_rounds, fl_escapes = 12, 2
+    out = fengine.solve_fleet_assignments(fleet, lam=LAM, cfg=CFG,
+                                          max_rounds=fl_rounds,
+                                          escape_iters=fl_escapes)
+    jax.block_until_ready(out.R)                       # warm the jit
+    t0 = time.perf_counter()
+    out = fengine.solve_fleet_assignments(fleet, lam=LAM, cfg=CFG,
+                                          max_rounds=fl_rounds,
+                                          escape_iters=fl_escapes)
+    out = jax.tree.map(np.asarray, out)
+    us_fleet = (time.perf_counter() - t0) * 1e6
+    R_fleet = float(np.sum(out.R))
+    rows.append(row(f"engine/fleet_device_C{C_CELLS}", us_fleet,
+                    f"sum_R={R_fleet:.1f};host_calls=1;"
+                    f"per_cell_us={us_fleet / C_CELLS:.0f}"))
+
+    t0 = time.perf_counter()
+    host_calls_fleet = 0
+    R_host_fleet = 0.0
+    for i in range(C_CELLS):
+        r = incremental.solve_host(fleet.cell(i), LAM, CFG,
+                                   max_rounds=fl_rounds,
+                                   escape_iters=fl_escapes)
+        host_calls_fleet += r.history.solve_calls
+        R_host_fleet += r.R
+    us_fleet_host = (time.perf_counter() - t0) * 1e6
+    rows.append(row(f"engine/fleet_hostloop_C{C_CELLS}", us_fleet_host,
+                    f"sum_R={R_host_fleet:.1f};"
+                    f"host_calls={host_calls_fleet};"
+                    f"per_cell_us={us_fleet_host / C_CELLS:.0f}"))
+    rows.append(row("engine/fleet_host_calls_per_cell", 0.0,
+                    f"hostloop={host_calls_fleet / C_CELLS:.1f};"
+                    f"engine={1 / C_CELLS:.3f}"))
+    if not quiet:
+        assert R_fleet <= R_host_fleet * (1 + 1e-4), (R_fleet, R_host_fleet)
+        assert host_calls_fleet / C_CELLS >= 5.0 * (1.0 / C_CELLS)
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

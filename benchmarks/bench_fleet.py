@@ -84,8 +84,11 @@ def run(quiet: bool = False):
     rows.append(row("fleet/tsia_seed", us_seed,
                     f"R={seed_res.R:.1f};solves={n_seed_calls}"))
 
+    # Host-driven batched TSIA (PR 1 path, kept measurable so this row's
+    # trajectory stays comparable across PRs; the device-resident engine
+    # has its own suite, benchmarks/bench_engine.py).
     t0 = time.perf_counter()
-    ours = incremental.solve(scn, LAM, CFG)
+    ours = incremental.solve_host(scn, LAM, CFG)
     us_ours = (time.perf_counter() - t0) * 1e6
     h = ours.history
     rows.append(row("fleet/tsia_batched", us_ours,

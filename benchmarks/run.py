@@ -8,9 +8,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig7/8 — HFL vs FL accuracy + objective          [bench_hfl_vs_fl]
   roofline — per-cell terms from the dry-run       [roofline]
   fleet — batched vs looped SROA + batched TSIA    [bench_fleet]
+  engine — device-resident assignment engine       [bench_engine]
 
-``--json PATH`` additionally writes every row as structured JSON so future
-changes get a machine-readable perf trajectory to diff against.
+``--json PATH`` additionally writes every row as structured JSON — with
+run metadata (git rev, jax version, backend/device, timestamp) — so
+``BENCH_*.json`` perf trajectories are comparable across PRs.
 """
 from __future__ import annotations
 
@@ -35,16 +37,47 @@ def _parse_row(suite: str, line: str) -> dict:
             "derived": derived}
 
 
+def _run_metadata() -> dict:
+    """Environment fingerprint embedded in every ``--json`` payload.
+
+    Makes BENCH_*.json trajectories comparable across PRs: a regression is
+    only a regression when the backend, device, and jax version match.
+    """
+    import platform
+    import subprocess
+
+    import jax
+
+    try:
+        rev = subprocess.run(
+            ["git", "-C", _ROOT, "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        rev = ""
+    dev = jax.devices()[0]
+    return {
+        "git_rev": rev or "unknown",
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": getattr(dev, "device_kind", str(dev)),
+        "device_count": jax.device_count(),
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: sroa,lambda,tsia,convergence,"
-                         "hfl_vs_fl,roofline,fleet")
+                         "hfl_vs_fl,roofline,fleet,engine")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as JSON to PATH")
     args = ap.parse_args()
-    from benchmarks import (bench_convergence, bench_fleet, bench_hfl_vs_fl,
-                            bench_lambda, bench_sroa, bench_tsia, roofline)
+    from benchmarks import (bench_convergence, bench_engine, bench_fleet,
+                            bench_hfl_vs_fl, bench_lambda, bench_sroa,
+                            bench_tsia, roofline)
     suites = {
         "sroa": bench_sroa.run,
         "lambda": bench_lambda.run,
@@ -53,6 +86,7 @@ def main() -> None:
         "hfl_vs_fl": bench_hfl_vs_fl.run,
         "roofline": roofline.run,
         "fleet": bench_fleet.run,
+        "engine": bench_engine.run,
     }
     wanted = args.only.split(",") if args.only else list(suites)
     unknown = [w for w in wanted if w not in suites]
@@ -80,10 +114,13 @@ def main() -> None:
                             "derived": "SUITE-ERROR"})
             traceback.print_exc(file=sys.stderr)
     if args.json:
-        import jax
+        meta = _run_metadata()
         payload = {
-            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
-            "backend": jax.default_backend(),
+            # Kept at the top level for backwards compatibility with the
+            # PR 1 payload shape; `metadata` is the complete fingerprint.
+            "timestamp": meta["timestamp"],
+            "backend": meta["backend"],
+            "metadata": meta,
             "suites": wanted,
             "ok": not failed,
             "rows": records,

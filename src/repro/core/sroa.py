@@ -94,6 +94,39 @@ def invert_rate(G: jnp.ndarray, target: jnp.ndarray, b_max,
 
 
 @functools.lru_cache(maxsize=None)
+def _pallas_invert_nd(iters: int):
+    """Arbitrary-rank Pallas inversion that keeps flattening under vmap.
+
+    ``kops.sroa_invert_rate_batched`` already collapses every leading axis
+    into one kernel launch, so the batching rule for *further* vmap levels
+    (e.g. the assignment engine's candidate axis nested under the fleet's
+    cell axis) just broadcasts the unbatched operands and recurses into the
+    same custom-vmap function one rank higher.
+    """
+    from jax.custom_batching import custom_vmap
+
+    from repro.kernels import ops as kops
+
+    @custom_vmap
+    def inv_nd(G, target, b_max):
+        # G, target: (..., N); b_max: (...) — one flattened kernel launch.
+        return kops.sroa_invert_rate_batched(G, target, b_max, iters=iters)
+
+    @inv_nd.def_vmap
+    def _rule_nd(axis_size, in_batched, G, target, b_max):  # noqa: ANN001
+        g_b, t_b, bm_b = in_batched
+        if not g_b:
+            G = jnp.broadcast_to(G, (axis_size,) + G.shape)
+        if not t_b:
+            target = jnp.broadcast_to(target, (axis_size,) + target.shape)
+        if not bm_b:
+            b_max = jnp.broadcast_to(b_max, (axis_size,) + jnp.shape(b_max))
+        return inv_nd(G, target, b_max), True
+
+    return inv_nd
+
+
+@functools.lru_cache(maxsize=None)
 def _pallas_invert(iters: int):
     """Pallas inversion with a batching rule that fills the kernel tiles.
 
@@ -101,6 +134,8 @@ def _pallas_invert(iters: int):
     fleet path: B scenarios x N users) the custom rule flattens the whole
     (B, N) batch into one kernel launch so small per-cell user counts pack
     full (8 x 128) VPU tiles instead of padding each cell separately.
+    Deeper nesting (candidates-within-cells) is handled by
+    :func:`_pallas_invert_nd`, whose rule flattens every additional level.
     """
     from jax.custom_batching import custom_vmap
 
@@ -118,7 +153,7 @@ def _pallas_invert(iters: int):
         if not t_b:
             target = jnp.broadcast_to(target, (axis_size,) + target.shape)
         bm = b_max if bm_b else jnp.broadcast_to(b_max, (axis_size,))
-        out = kops.sroa_invert_rate_batched(G, target, bm, iters=iters)
+        out = _pallas_invert_nd(iters)(G, target, bm)
         return out, True
 
     return inv
@@ -260,10 +295,16 @@ def _auto_bounds(consts: SroaConstants, B, f_max, p_max, N0, lam,
     return t_lo, t_up
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def solve_constants(consts: SroaConstants, B, b_max, f_max, p_max, N0, lam,
-                    cfg: SroaConfig = SroaConfig()) -> SroaResult:
-    """Algorithm 4 driver on pre-computed constants."""
+def solve_constants_impl(consts: SroaConstants, B, b_max, f_max, p_max, N0,
+                         lam, cfg: SroaConfig = SroaConfig()) -> SroaResult:
+    """Algorithm 4 driver on pre-computed constants (un-jitted).
+
+    The traceable entry point: the assignment engine
+    (:mod:`repro.fleet.engine`) vmaps this over a candidate axis *inside*
+    its own jitted while_loop (and the fleet path vmaps that again over
+    cells), so the jit wrapper lives one level up in
+    :func:`solve_constants`.
+    """
 
     def eval_t(t):
         b, f, p, b_sum = algorithm3(consts, t, B, b_max, f_max, p_max, N0, cfg)
@@ -367,6 +408,11 @@ def solve_constants(consts: SroaConstants, B, b_max, f_max, p_max, N0, lam,
 
     return SroaResult(b=b, f=f, p=p, t=t, R=R, b_sum=b_sum,
                       feasible=b_sum <= B * (1.0 + 1e-3))
+
+
+solve_constants = partial(jax.jit, static_argnames=("cfg",))(
+    solve_constants_impl)
+solve_constants.__doc__ = "Jitted :func:`solve_constants_impl`."
 
 
 def solve(scn: Scenario, assign: jnp.ndarray, lam,

@@ -105,6 +105,26 @@ def objective(scn: Scenario, assign, b, f, p, lam) -> jnp.ndarray:
     return evaluate(scn, assign, b, f, p, lam).R
 
 
+def evaluate_candidates(scn: Scenario, assigns: jnp.ndarray, b: jnp.ndarray,
+                        f: jnp.ndarray, p: jnp.ndarray, lam,
+                        mask: jnp.ndarray | None = None) -> CostBreakdown:
+    """Candidate-axis batched :func:`evaluate` for ONE scenario.
+
+    Args:
+      assigns:  (A, N) int32 — A candidate assignment patterns.
+      b, f, p:  (A, N) per-candidate allocations.
+      mask:     optional (N,) bool shared by every candidate.
+    Returns:
+      CostBreakdown whose leaves carry a leading (A,) axis.  This is the
+      scoring half of the device-resident assignment engine: all A
+      patterns are valued in one traced computation, with the shared
+      scenario and mask closed over instead of broadcast.
+    """
+    fn = lambda a, b_, f_, p_: evaluate(scn, a, b_, f_, p_, lam,  # noqa: E731
+                                        mask)
+    return jax.vmap(fn)(assigns, b, f, p)
+
+
 class SroaConstants(NamedTuple):
     """Per-user constants of problem (17)-(22); eqs (18)-(20)."""
 

@@ -12,6 +12,12 @@ Each visited pattern is scored by one SROA solve (Algorithm 4), so the outer
 loop is host-side Python around a single jitted solver — the same structure
 the paper describes (an "assigning iteration" = one execution of the spectrum
 resource management method).
+
+This module is the paper-faithful REFERENCE ORACLE and is kept host-side on
+purpose: production planning routes through the device-resident engine
+(:mod:`repro.fleet.engine`), which runs the whole search in one jitted call
+and is parity-tested against this implementation (its best R must never be
+worse; see ``tests/test_engine.py``).
 """
 from __future__ import annotations
 

@@ -2,16 +2,24 @@
 
 * :mod:`repro.fleet.batch`       — stacked scenarios + one-call batched SROA.
 * :mod:`repro.fleet.dynamics`    — mobility / fading / churn scenario streams.
-* :mod:`repro.fleet.incremental` — batched TSIA and warm-start re-planning.
+* :mod:`repro.fleet.engine`      — device-resident assignment search (TSIA
+  as ONE jitted ``lax.while_loop`` per cell, vmap-able over a fleet).
+* :mod:`repro.fleet.incremental` — engine front end + PR 1 host reference
+  loop and warm-start re-planning.
 * :mod:`repro.fleet.planner`     — the cached :class:`FleetPlanner` facade.
 """
-from repro.fleet.batch import (FleetScenario, draw_fleet, fleet_assignments,
-                               fleet_constants, solve_batch, solve_candidates,
-                               stack_scenarios)
+from repro.fleet.batch import (FleetScenario, candidate_assigns_device,
+                               draw_fleet, fleet_assignments, fleet_constants,
+                               solve_batch, solve_candidates, stack_scenarios)
+from repro.fleet.engine import (EngineResult, EngineTrace, solve_assignment,
+                                solve_fleet_assignments)
 from repro.fleet.planner import FleetPlanner, PlanResult, scenario_digest
 
 __all__ = [
-    "FleetScenario", "draw_fleet", "fleet_assignments", "fleet_constants",
-    "solve_batch", "solve_candidates", "stack_scenarios",
+    "FleetScenario", "candidate_assigns_device", "draw_fleet",
+    "fleet_assignments", "fleet_constants", "solve_batch",
+    "solve_candidates", "stack_scenarios",
+    "EngineResult", "EngineTrace", "solve_assignment",
+    "solve_fleet_assignments",
     "FleetPlanner", "PlanResult", "scenario_digest",
 ]

@@ -179,6 +179,38 @@ def solve_batch(fleet: FleetScenario, assigns: jnp.ndarray | None = None,
                                  cfg)
 
 
+def candidate_assigns_device(assign: jnp.ndarray, M: int,
+                             movable: jnp.ndarray | None = None
+                             ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Device-resident single-move neighbourhood with fixed-size padding.
+
+    Row 0 is the current pattern; rows 1..N*(M-1) move user ``n`` to edge
+    ``(assign[n] + k) % M`` for k in 1..M-1 (every edge except its own).
+    The candidate count ``A = 1 + N*(M-1)`` depends only on the static
+    shapes — never on the mask — so churn (users toggling in ``movable``)
+    re-flags rows in the returned validity vector instead of changing any
+    array shape, and the engine's jitted search never recompiles.
+
+    Returns:
+      cands: (A, N) int32 candidate patterns.
+      valid: (A,) bool — False rows (moves of non-movable users) must be
+             excluded from any argmin by the caller.
+    """
+    assign = jnp.asarray(assign, jnp.int32)
+    N = assign.shape[0]
+    if movable is None:
+        movable = jnp.ones((N,), bool)
+    offs = jnp.arange(1, M, dtype=jnp.int32)
+    dst = (assign[:, None] + offs[None, :]) % M            # (N, M-1)
+    eye = jnp.eye(N, dtype=bool)
+    moves = jnp.where(eye[:, None, :], dst[:, :, None],
+                      assign[None, None, :])               # (N, M-1, N)
+    cands = jnp.concatenate([assign[None], moves.reshape(N * (M - 1), N)])
+    valid = jnp.concatenate([jnp.ones((1,), bool),
+                             jnp.repeat(jnp.asarray(movable, bool), M - 1)])
+    return cands, valid
+
+
 def solve_candidates(scn: Scenario, assigns: jnp.ndarray, lam=1.0,
                      cfg: sroa.SroaConfig = sroa.SroaConfig(),
                      mask: jnp.ndarray | None = None) -> sroa.SroaResult:

@@ -1,0 +1,272 @@
+"""Device-resident assignment engine: TSIA as ONE jitted computation.
+
+The seed TSIA (:mod:`repro.core.tsia`) pays one host->device round trip per
+assigning iteration; PR 1's batched TSIA (:mod:`repro.fleet.incremental`)
+amortizes the neighbourhood into one round trip per iteration but still
+drives the descent/escape loop from host Python.  Here the ENTIRE search —
+candidate enumeration (current pattern + all N x (M-1) single moves,
+mask-validated), batched SROA scoring, best-move selection, the paper's
+Definition 1/2 escape, best-ever-visited tracking, and revisit-based
+convergence (Remark 1) — runs inside a single ``lax.while_loop``:
+
+* :func:`solve_assignment` — one cell's full assignment search in ONE
+  jitted call (zero per-iteration host round trips);
+* :func:`solve_fleet_assignments` — ``jax.vmap`` of the same loop over a
+  :class:`~repro.fleet.batch.FleetScenario`, so e.g. 128 cells' complete
+  searches execute as one XLA computation.
+
+Candidate padding is fixed-size (``A = 1 + N*(M-1)`` always; moves of
+masked users are flagged invalid, not dropped), so churn never changes a
+shape and the engine never recompiles across dynamics events.  The search
+history is recorded into fixed-size device trace buffers (see
+:class:`EngineTrace`); :mod:`repro.fleet.incremental` reconstructs its
+host-side ``BatchedTsiaHistory`` from them.  See DESIGN.md D7.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import sroa
+from repro.core.system_model import (evaluate, evaluate_candidates,
+                                     sroa_constants, sroa_constants_batched)
+from repro.core.wireless import Scenario, nearest_edge_assignment
+from repro.fleet.batch import (FleetScenario, candidate_assigns_device,
+                               fleet_assignments)
+
+_BIG = 1e30
+
+# Move-kind codes in EngineTrace.moves[:, 3].
+KIND_DESCENT = 0
+KIND_ESCAPE = 1
+
+
+class EngineTrace(NamedTuple):
+    """Fixed-size device-side search trace (one row per assigning round).
+
+    Rows past the executed round count have ``rounds_valid == False``.
+    ``moves`` rows are (user, src_edge, dst_edge, kind, moved): ``moved``
+    is 0 on the final round when neither an improving move nor an escape
+    existed (the round that establishes convergence scores the
+    neighbourhood but stays put).
+    """
+
+    R_best: jnp.ndarray        # (T,) f32 best-ever evaluate-R after round
+    R_current: jnp.ndarray     # (T,) f32 evaluate-R of the round's pattern
+    moves: jnp.ndarray         # (T, 5) i32 (user, src, dst, kind, moved)
+    rounds_valid: jnp.ndarray  # (T,) bool — row corresponds to a real round
+
+
+class EngineResult(NamedTuple):
+    assign: jnp.ndarray     # (N,) i32 best pattern ever visited
+    R: jnp.ndarray          # () f32 evaluate-R (eq 15) of ``assign``
+    sroa: sroa.SroaResult   # SROA allocation for ``assign``
+    rounds: jnp.ndarray     # () i32 assigning iterations executed
+    escapes: jnp.ndarray    # () i32 Definition-1/2 escapes taken
+    converged: jnp.ndarray  # () bool — stopped by revisit/exhaustion,
+    #                              not by the round cap
+    trace: EngineTrace
+
+
+class _EngineState(NamedTuple):
+    current: jnp.ndarray      # (N,) i32
+    visited: jnp.ndarray      # (T+1, N) i32, -1 rows unused (Remark 1 set)
+    best_assign: jnp.ndarray  # (N,) i32
+    best_R: jnp.ndarray       # () f32
+    rounds: jnp.ndarray       # () i32
+    escapes: jnp.ndarray      # () i32
+    done: jnp.ndarray         # () bool
+    converged: jnp.ndarray    # () bool
+    trace: EngineTrace
+
+
+def escape_move(assign: jnp.ndarray, R_m: jnp.ndarray, b: jnp.ndarray,
+                mask: jnp.ndarray, M: int):
+    """The paper's Definition 1/2 escape, as pure device arithmetic.
+
+    Costly edge m+ = argmax R_m over *occupied* edges (Definition 1),
+    economic edge m- = argmin R_m, costly user = argmax b_n among the
+    movable members of m+ (Definition 2).
+
+    Returns (user, m_plus, m_minus, ok): ``ok`` is False when the move is
+    undefined (m+ == m-, or m+ has no movable member), matching the seed
+    TSIA's break conditions.
+    """
+    psi = jax.nn.one_hot(assign, M, dtype=jnp.float32)
+    psi = psi * mask.astype(jnp.float32)[:, None]
+    counts = psi.sum(axis=0)                               # (M,)
+    R_m_occ = jnp.where(counts > 0, R_m, -jnp.inf)
+    m_plus = jnp.argmax(R_m_occ).astype(jnp.int32)
+    m_minus = jnp.argmin(R_m).astype(jnp.int32)
+    member = (assign == m_plus) & mask
+    user = jnp.argmax(jnp.where(member, b, -jnp.inf)).astype(jnp.int32)
+    ok = (m_plus != m_minus) & (counts[m_plus] > 0) & jnp.any(member)
+    return user, m_plus, m_minus, ok
+
+
+def _score_neighbourhood(scn: Scenario, cands: jnp.ndarray,
+                         mask: jnp.ndarray, lam, cfg: sroa.SroaConfig):
+    """Batched SROA + cost model over the candidate axis (one computation)."""
+    consts = sroa_constants_batched(scn, cands, mask)
+    B = scn.B_total
+
+    def one(c):
+        return sroa.solve_constants_impl(c, B, B, scn.f_max, scn.p_max,
+                                         scn.N0, lam, cfg)
+
+    res = jax.vmap(one)(consts)
+    ev = evaluate_candidates(scn, cands, res.b, res.f, res.p, lam, mask)
+    return res, ev
+
+
+def engine_core(scn: Scenario, init_assign: jnp.ndarray, mask: jnp.ndarray,
+                lam, cfg: sroa.SroaConfig, max_rounds: int,
+                escape_iters: int) -> EngineResult:
+    """The traceable search loop (vmap this for fleets; jit it via
+    :func:`solve_assignment`)."""
+    N, M = scn.N, scn.M
+    T = int(max_rounds)
+    lam = jnp.asarray(lam, jnp.float32)
+    init = jnp.asarray(init_assign, jnp.int32)
+    mask = jnp.asarray(mask, bool)
+
+    def body(st: _EngineState) -> _EngineState:
+        cands, valid = candidate_assigns_device(st.current, M, mask)
+        res, ev = _score_neighbourhood(scn, cands, mask, lam, cfg)
+        Rv = jnp.where(valid, ev.R, _BIG)
+        j = jnp.argmin(Rv)                 # first minimum; index 0 on ties
+        R0 = Rv[0]
+        improving = Rv[j] < R0
+
+        new_best = Rv[j] < st.best_R       # Alg 5 lines 19-21, vectorized
+        best_R = jnp.where(new_best, Rv[j], st.best_R)
+        best_assign = jnp.where(new_best, cands[j], st.best_assign)
+
+        # Decode the descending move (meaningful only when improving).
+        diff = cands[j] != st.current
+        d_user = jnp.argmax(diff).astype(jnp.int32)
+        d_src = st.current[d_user]
+        d_dst = cands[j][d_user]
+
+        # Paper-style escape at a local optimum (Definitions 1/2).
+        e_user, m_plus, m_minus, e_ok = escape_move(
+            st.current, ev.R_m[0], res.b[0], mask, M)
+        can_escape = (~improving) & e_ok & (st.escapes < escape_iters)
+        esc_assign = st.current.at[e_user].set(m_minus)
+
+        moved = improving | can_escape
+        nxt = jnp.where(improving, cands[j],
+                        jnp.where(can_escape, esc_assign, st.current))
+        # Remark 1: a revisited pattern implies a cycle (the walk is a
+        # deterministic function of the pattern alone) -> converged.
+        revisit = moved & jnp.any(
+            jnp.all(st.visited == nxt[None, :], axis=1))
+        visited = st.visited.at[st.rounds + 1].set(
+            jnp.where(moved, nxt, -1))
+        done = (~moved) | revisit
+
+        r = st.rounds
+        user = jnp.where(improving, d_user, e_user)
+        src = jnp.where(improving, d_src, m_plus)
+        dst = jnp.where(improving, d_dst, m_minus)
+        kind = jnp.where(improving, KIND_DESCENT, KIND_ESCAPE)
+        move_row = jnp.stack([user, src, dst, kind,
+                              moved.astype(jnp.int32)]).astype(jnp.int32)
+        trace = EngineTrace(
+            R_best=st.trace.R_best.at[r].set(best_R),
+            R_current=st.trace.R_current.at[r].set(R0),
+            moves=st.trace.moves.at[r].set(move_row),
+            rounds_valid=st.trace.rounds_valid.at[r].set(True))
+
+        return _EngineState(
+            current=nxt, visited=visited, best_assign=best_assign,
+            best_R=best_R, rounds=r + jnp.int32(1),
+            escapes=st.escapes + can_escape.astype(jnp.int32),
+            done=done, converged=st.converged | done, trace=trace)
+
+    def cond(st: _EngineState):
+        return (~st.done) & (st.rounds < T)
+
+    trace0 = EngineTrace(
+        R_best=jnp.full((T,), jnp.inf, jnp.float32),
+        R_current=jnp.full((T,), jnp.inf, jnp.float32),
+        moves=jnp.zeros((T, 5), jnp.int32),
+        rounds_valid=jnp.zeros((T,), bool))
+    st0 = _EngineState(
+        current=init,
+        visited=jnp.full((T + 1, N), -1, jnp.int32).at[0].set(init),
+        best_assign=init,
+        best_R=jnp.asarray(jnp.inf, jnp.float32),
+        rounds=jnp.int32(0), escapes=jnp.int32(0),
+        done=jnp.asarray(False), converged=jnp.asarray(False),
+        trace=trace0)
+    st = lax.while_loop(cond, body, st0) if T > 0 else st0
+
+    # One final constants-space solve for the winning pattern (also covers
+    # max_rounds == 0, where the loop never scored anything).
+    B = scn.B_total
+    consts = sroa_constants(scn, st.best_assign, mask)
+    res = sroa.solve_constants_impl(consts, B, B, scn.f_max, scn.p_max,
+                                    scn.N0, lam, cfg)
+    ev = evaluate(scn, st.best_assign, res.b, res.f, res.p, lam, mask)
+    return EngineResult(assign=st.best_assign, R=ev.R, sroa=res,
+                        rounds=st.rounds, escapes=st.escapes,
+                        converged=st.converged, trace=st.trace)
+
+
+@partial(jax.jit, static_argnames=("cfg", "max_rounds", "escape_iters"))
+def solve_assignment(scn: Scenario, init_assign: jnp.ndarray | None = None,
+                     mask: jnp.ndarray | None = None, lam=1.0,
+                     cfg: sroa.SroaConfig = sroa.SroaConfig(),
+                     max_rounds: int = 48,
+                     escape_iters: int = 6) -> EngineResult:
+    """One cell's ENTIRE assignment search as one jitted call.
+
+    Args:
+      scn:          wireless scenario (pytree of arrays).
+      init_assign:  (N,) int32 start pattern (nearest-edge when None,
+                    Alg 5 line 5).
+      mask:         (N,) bool active users (None = all active); inactive
+                    users are never moved and carry zero cost.
+      lam:          objective weight lambda (eq 15).
+      cfg:          SROA config shared by every candidate solve.
+      max_rounds:   assigning-iteration cap (sizes the trace buffers).
+      escape_iters: non-improving Definition-1/2 escapes allowed.
+    """
+    if mask is None:
+        mask = jnp.ones((scn.N,), bool)
+    if init_assign is None:
+        init_assign = nearest_edge_assignment(scn)
+    return engine_core(scn, init_assign, mask, lam, cfg, max_rounds,
+                       escape_iters)
+
+
+@partial(jax.jit, static_argnames=("cfg", "max_rounds", "escape_iters"))
+def solve_fleet_assignments(fleet: FleetScenario,
+                            init_assigns: jnp.ndarray | None = None,
+                            lam=1.0,
+                            cfg: sroa.SroaConfig = sroa.SroaConfig(),
+                            max_rounds: int = 48,
+                            escape_iters: int = 6) -> EngineResult:
+    """Full assignment searches for EVERY cell of a fleet in one call.
+
+    ``jax.vmap`` of :func:`engine_core` over the stacked cells: every leaf
+    of the returned :class:`EngineResult` carries a leading (C,) axis.
+    ``lam`` may be scalar or (C,).  Cells that converge early idle inside
+    the batched while_loop (their element-wise state is frozen) until the
+    slowest cell finishes — still zero host round trips overall.
+    """
+    if init_assigns is None:
+        init_assigns = fleet_assignments(fleet)
+    lam_v = jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (fleet.C,))
+
+    def one(cell, init, mask, l):
+        return engine_core(cell, init, mask, l, cfg, max_rounds,
+                           escape_iters)
+
+    return jax.vmap(one)(fleet.cells, jnp.asarray(init_assigns, jnp.int32),
+                         fleet.mask, lam_v)

@@ -1,20 +1,20 @@
-"""Incremental, batched TSIA: all candidate moves scored per round trip.
+"""Incremental TSIA front end: device-resident engine + host reference loop.
 
-The seed TSIA (:mod:`repro.core.tsia`) issues ONE SROA solve per assigning
-iteration — a host->device round trip per candidate pattern it looks at.
-Here every assigning iteration scores the ENTIRE single-user-move
-neighbourhood (the current pattern plus all N x (M-1) moves) in one
-batched call through :func:`repro.fleet.batch.solve_candidates`, then:
+:func:`solve` is now a thin host wrapper around the device-resident
+assignment engine (:mod:`repro.fleet.engine`): the ENTIRE descent+escape
+search — candidate enumeration, batched SROA scoring, best-move selection,
+Definition-1/2 escapes, best-ever tracking, convergence detection — runs
+inside one jitted ``lax.while_loop``, so a whole plan costs exactly ONE
+host->device solve call.  The wrapper's only job is to reconstruct the
+:class:`BatchedTsiaHistory` (trace, moves, round-trip accounting) from the
+engine's fixed-size device trace buffers.
 
-* **descent** — greedily accepts the best improving move (a strictly
-  stronger step than the paper's costly-user heuristic, which is one
-  member of the scored neighbourhood);
-* **escape** — at a local optimum it applies the paper's Definition 1/2
-  move (costly user of the costly edge -> economic edge) even when
-  non-improving, exactly like Algorithm 5's non-monotone walk, and resumes
-  descent; the best pattern ever visited is returned (Alg 5 lines 19-21).
+:func:`solve_host` keeps PR 1's host-driven loop — one batched SROA call
+per assigning iteration — as the reference implementation the engine is
+benchmarked and parity-tested against (see ``benchmarks/bench_engine.py``
+and ``tests/test_engine.py``).
 
-:func:`replan` warm-starts the search from a previous assignment after a
+:func:`replan` warm-starts either path from a previous assignment after a
 dynamics event, seeding only new/invalid users via nearest-edge init.
 """
 from __future__ import annotations
@@ -30,6 +30,7 @@ from repro.core import sroa
 from repro.core.system_model import evaluate
 from repro.core.wireless import Scenario, nearest_edge_assignment
 from repro.fleet import batch as fbatch
+from repro.fleet import engine as fengine
 
 
 @dataclasses.dataclass
@@ -77,16 +78,65 @@ def _first_move(base: np.ndarray, cand: np.ndarray) -> tuple[int, int, int]:
     return n, int(base[n]), int(cand[n])
 
 
+def _history_from_trace(res: fengine.EngineResult, n_movable: int,
+                        M: int) -> BatchedTsiaHistory:
+    """Rebuild the host-side history from the engine's device trace."""
+    rounds = int(res.rounds)
+    valid = np.asarray(res.trace.rounds_valid)
+    R_best = np.asarray(res.trace.R_best)
+    mv = np.asarray(res.trace.moves)
+    hist = BatchedTsiaHistory(R_trace=[], moves=[], rounds=rounds,
+                              solve_calls=1)
+    # Every executed round scored the full fixed-size neighbourhood; only
+    # the valid rows (current pattern + movable users' moves) count.  With
+    # no rounds (max_rounds=0) the engine still scores the init pattern.
+    hist.candidates_evaluated = (rounds * (1 + n_movable * (M - 1))
+                                 if rounds else 1)
+    kind_name = {fengine.KIND_DESCENT: "descent",
+                 fengine.KIND_ESCAPE: "escape"}
+    for r in np.flatnonzero(valid):
+        hist.R_trace.append(float(R_best[r]))
+        user, src, dst, kind, moved = (int(x) for x in mv[r])
+        if moved:
+            hist.moves.append((int(r) + 1, user, src, dst,
+                               kind_name[kind]))
+    return hist
+
+
 def solve(scn: Scenario, lam=1.0,
           cfg: sroa.SroaConfig = sroa.SroaConfig(),
           init_assign: np.ndarray | None = None,
           max_rounds: int = 64, escape_iters: int = 8,
           mask: np.ndarray | None = None) -> BatchedTsiaResult:
-    """Batched TSIA: best-improvement descent + Algorithm-5-style escapes.
+    """Device-resident batched TSIA: ONE jitted call for the whole search.
 
     ``mask`` marks active users (inactive slots are never moved and carry
     zero cost); it is how churned scenarios from
     :mod:`repro.fleet.dynamics` are planned without reshaping.
+    """
+    jmask = (jnp.ones((scn.N,), bool) if mask is None
+             else jnp.asarray(mask, bool))
+    init = (None if init_assign is None
+            else jnp.asarray(np.asarray(init_assign), jnp.int32))
+    res = fengine.solve_assignment(scn, init, jmask, lam, cfg=cfg,
+                                   max_rounds=max_rounds,
+                                   escape_iters=escape_iters)
+    n_movable = int(np.asarray(jmask).sum())
+    hist = _history_from_trace(res, n_movable, scn.M)
+    return BatchedTsiaResult(assign=np.asarray(res.assign),
+                             sroa=jax.tree.map(np.asarray, res.sroa),
+                             R=float(res.R), history=hist)
+
+
+def solve_host(scn: Scenario, lam=1.0,
+               cfg: sroa.SroaConfig = sroa.SroaConfig(),
+               init_assign: np.ndarray | None = None,
+               max_rounds: int = 64, escape_iters: int = 8,
+               mask: np.ndarray | None = None) -> BatchedTsiaResult:
+    """PR 1 reference path: host loop, one batched SROA call per round.
+
+    Kept as the oracle the device-resident engine is parity-tested and
+    benchmarked against; plan-mode serving routes through :func:`solve`.
     """
     M = scn.M
     movable = None if mask is None else np.asarray(mask, bool)
@@ -170,8 +220,8 @@ def replan(scn: Scenario, prev_assign: np.ndarray, lam=1.0,
            cfg: sroa.SroaConfig = sroa.SroaConfig(),
            new_users: np.ndarray | None = None,
            mask: np.ndarray | None = None,
-           max_rounds: int = 16, escape_iters: int = 2
-           ) -> BatchedTsiaResult:
+           max_rounds: int = 16, escape_iters: int = 2,
+           use_engine: bool = True) -> BatchedTsiaResult:
     """Warm-start re-planning after a dynamics event.
 
     Keeps the previous assignment for surviving users (their optimum moves
@@ -184,5 +234,6 @@ def replan(scn: Scenario, prev_assign: np.ndarray, lam=1.0,
     if new_users is not None and len(new_users):
         ne = np.asarray(nearest_edge_assignment(scn))
         init[np.asarray(new_users, int)] = ne[np.asarray(new_users, int)]
-    return solve(scn, lam, cfg, init_assign=init, max_rounds=max_rounds,
-                 escape_iters=escape_iters, mask=mask)
+    solver = solve if use_engine else solve_host
+    return solver(scn, lam, cfg, init_assign=init, max_rounds=max_rounds,
+                  escape_iters=escape_iters, mask=mask)

@@ -22,6 +22,7 @@ import numpy as np
 from repro.core import sroa
 from repro.core.wireless import Scenario
 from repro.fleet import batch as fbatch
+from repro.fleet import engine as fengine
 from repro.fleet import incremental
 
 
@@ -60,17 +61,22 @@ class FleetPlanner:
       cache_size:   max retained plans (LRU eviction).
       max_rounds:   batched-TSIA assigning-iteration budget per cold plan.
       escape_iters: non-improving Algorithm-5 escapes allowed per plan.
+      use_engine:   route cold plans through the device-resident engine
+                    (one jitted call per plan, :mod:`repro.fleet.engine`);
+                    False falls back to the host-driven loop
+                    (:func:`repro.fleet.incremental.solve_host`).
     """
 
     def __init__(self, lam: float = 1.0,
                  cfg: sroa.SroaConfig = sroa.SroaConfig(),
                  cache_size: int = 256, max_rounds: int = 48,
-                 escape_iters: int = 6):
+                 escape_iters: int = 6, use_engine: bool = True):
         self.lam = float(lam)
         self.cfg = cfg
         self.cache_size = cache_size
         self.max_rounds = max_rounds
         self.escape_iters = escape_iters
+        self.use_engine = use_engine
         self._cache: OrderedDict[str, PlanResult] = OrderedDict()
         self.hits = 0
         self.misses = 0
@@ -113,12 +119,15 @@ class FleetPlanner:
             res = incremental.replan(scn, warm_assign, self.lam, self.cfg,
                                      new_users=new_users, mask=mask,
                                      max_rounds=self.max_rounds,
-                                     escape_iters=self.escape_iters)
+                                     escape_iters=self.escape_iters,
+                                     use_engine=self.use_engine)
         else:
-            res = incremental.solve(scn, self.lam, self.cfg,
-                                    max_rounds=self.max_rounds,
-                                    escape_iters=self.escape_iters,
-                                    mask=mask)
+            solver = (incremental.solve if self.use_engine
+                      else incremental.solve_host)
+            res = solver(scn, self.lam, self.cfg,
+                         max_rounds=self.max_rounds,
+                         escape_iters=self.escape_iters,
+                         mask=mask)
         plan = PlanResult(
             assign=np.asarray(res.assign), b=np.asarray(res.sroa.b),
             f=np.asarray(res.sroa.f), p=np.asarray(res.sroa.p),
@@ -147,12 +156,63 @@ class FleetPlanner:
 
     def plan_fleet(self, fleet: fbatch.FleetScenario,
                    warm: list | None = None) -> list[PlanResult]:
-        """Plan every cell of a fleet (per-cell cache + warm starts)."""
+        """Plan every cell of a fleet (per-cell cache + warm starts).
+
+        With the engine enabled and no warm starts, the cold cells are
+        planned through :meth:`plan_fleet_batched` — every cell's full
+        assignment search in ONE jitted call — instead of cell-by-cell.
+        """
         warm = warm or [None] * fleet.C
+        if self.use_engine and all(w is None for w in warm):
+            return self.plan_fleet_batched(fleet)
         return [self.plan(fleet.cell(i),
                           warm_assign=None if warm[i] is None
                           else warm[i].assign)
                 for i in range(fleet.C)]
+
+    def plan_fleet_batched(self,
+                           fleet: fbatch.FleetScenario) -> list[PlanResult]:
+        """Cold-plan a fleet via the device-resident engine (cache-aware).
+
+        Cache hits short-circuit per cell; the remaining cells run their
+        ENTIRE assignment searches inside one
+        :func:`repro.fleet.engine.solve_fleet_assignments` call (a subset
+        fleet is sliced out when only some cells miss, so cached cells
+        cost nothing on device).
+        """
+        keys = [scenario_digest(fleet.cell(i), self.lam)
+                for i in range(fleet.C)]
+        plans: dict[int, PlanResult] = {}
+        miss = []
+        for i, k in enumerate(keys):
+            hit = self._lookup(k)
+            if hit is not None:
+                plans[i] = hit
+            else:
+                miss.append(i)
+        if miss:
+            sub = (fleet if len(miss) == fleet.C
+                   else jax.tree.map(lambda x: x[np.asarray(miss)], fleet))
+            t0 = time.perf_counter()
+            out = fengine.solve_fleet_assignments(
+                sub, lam=self.lam, cfg=self.cfg,
+                max_rounds=self.max_rounds,
+                escape_iters=self.escape_iters)
+            out = jax.tree.map(np.asarray, out)
+            ms = (time.perf_counter() - t0) * 1e3 / len(miss)
+            for row, i in enumerate(miss):
+                n = int(fleet.n_users[i])
+                # ONE device call covers every miss cell: charge it to the
+                # first plan so summed telemetry stays exact (1/C per cell).
+                plan = PlanResult(
+                    assign=out.assign[row][:n], b=out.sroa.b[row][:n],
+                    f=out.sroa.f[row][:n], p=out.sroa.p[row][:n],
+                    R=float(out.R[row]), t=float(out.sroa.t[row]),
+                    cached=False, solve_calls=1 if row == 0 else 0,
+                    plan_ms=ms)
+                self._insert(keys[i], plan)
+                plans[i] = plan
+        return [plans[i] for i in range(fleet.C)]
 
     def allocate_fleet(self, fleet: fbatch.FleetScenario,
                        assigns=None) -> sroa.SroaResult:

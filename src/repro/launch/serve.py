@@ -59,10 +59,12 @@ def run_planner(args) -> dict:
                        n_range=(n_lo, args.cell_users))
     cfg = sroa.SroaConfig(b_iters=30, f_iters=24, p_iters=20, t_iters=28)
     planner = FleetPlanner(lam=args.lam, cfg=cfg,
-                           max_rounds=args.plan_rounds, escape_iters=2)
+                           max_rounds=args.plan_rounds, escape_iters=2,
+                           use_engine=not args.host_loop)
 
+    route = "host loop" if args.host_loop else "device-resident engine"
     print(f"[plan] fleet: {fleet.C} cells, N_max={fleet.N_max}, "
-          f"M={fleet.M}")
+          f"M={fleet.M} (route: {route})")
     t0 = time.time()
     plans = planner.plan_fleet(fleet)
     total_R = sum(p.R for p in plans)
@@ -125,6 +127,9 @@ def main(argv=None):
                     help="batched-TSIA iteration budget per cold plan")
     ap.add_argument("--event-rate", type=float, default=0.4,
                     help="per-round probability a cell sees dynamics")
+    ap.add_argument("--host-loop", action="store_true",
+                    help="plan via the PR 1 host-driven loop instead of "
+                         "the device-resident engine")
     args = ap.parse_args(argv)
 
     if args.mode == "plan":

@@ -137,6 +137,7 @@ def test_sroa_beats_every_baseline(seed):
     assert best == "SROA", scores
 
 
+@pytest.mark.slow
 def test_sroa_plus_no_worse_than_sroa(scn, assign, sroa_res):
     plus = sroa.solve_plus(scn, assign, LAM)
     assert float(plus.R) <= float(sroa_res.R) * (1 + 1e-6)

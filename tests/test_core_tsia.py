@@ -5,6 +5,11 @@ import pytest
 from repro.core import assignment_baselines as ub
 from repro.core import baselines, sroa, system_model, tsia, wireless
 
+# Trimmed iteration caps (paper defaults are 42/40/36/48): TSIA behaviour —
+# moves, convergence, dominance — is insensitive to the last bisection
+# digits, and the full-cap configs are exercised by benchmarks/.
+CFG = sroa.SroaConfig(b_iters=36, f_iters=30, p_iters=26, t_iters=36)
+
 
 @pytest.fixture(scope="module")
 def scn():
@@ -13,11 +18,11 @@ def scn():
 
 @pytest.fixture(scope="module")
 def tsia_res(scn):
-    return tsia.solve(scn, lam=1.0)
+    return tsia.solve(scn, lam=1.0, cfg=CFG)
 
 
 def _score(scn, assign, lam=1.0):
-    res = sroa.solve(scn, assign, lam)
+    res = sroa.solve(scn, assign, lam, CFG)
     return float(system_model.evaluate(scn, assign, res.b, res.f, res.p,
                                        lam).R)
 
@@ -43,7 +48,7 @@ def test_tsia_convergence_iterations(scn, tsia_res):
 
 
 def test_tsia_deterministic(scn, tsia_res):
-    again = tsia.solve(scn, lam=1.0)
+    again = tsia.solve(scn, lam=1.0, cfg=CFG)
     np.testing.assert_array_equal(tsia_res.assign, again.assign)
     assert tsia_res.R == pytest.approx(again.R)
 
@@ -51,17 +56,18 @@ def test_tsia_deterministic(scn, tsia_res):
 def test_tsia_improves_random_init(scn):
     rng = np.random.default_rng(1)
     init = rng.integers(0, scn.M, size=scn.N).astype(np.int32)
-    res = tsia.solve(scn, lam=1.0, init_assign=init)
+    res = tsia.solve(scn, lam=1.0, cfg=CFG, init_assign=init)
     assert res.R < res.history.R_trace[0] * 0.999
 
 
+@pytest.mark.slow
 def test_tsia_beats_published_baselines(scn):
     """Paper Fig 4: TSIA(+SROA) below HFEL-UA(+HFEL-RA) and JUARA-UA(+JUARA-RA).
 
     Each baseline is paired with the resource allocation from its own paper,
     exactly as in the paper's comparison.
     """
-    t = tsia.solve(scn, lam=1.0)
+    t = tsia.solve(scn, lam=1.0, cfg=CFG)
     R_tsia = t.R
 
     # HFEL: random init + transfer/exchange, scored by its own RA
@@ -92,5 +98,5 @@ def test_tsia_trace_records_moves(scn, tsia_res):
 def test_tsia_plus_extension_beats_paper_tsia(scn, tsia_res):
     """Beyond-paper: best-gain init dominates the geographic init here."""
     init = ub.bestgain_ua(scn, 1.0, None)
-    res = tsia.solve(scn, lam=1.0, init_assign=init)
+    res = tsia.solve(scn, lam=1.0, cfg=CFG, init_assign=init)
     assert res.R <= tsia_res.R * (1 + 1e-6)

@@ -1,0 +1,171 @@
+"""Device-resident assignment engine: parity, escape semantics, traces.
+
+The engine (repro.fleet.engine) must never return a worse objective than
+either host-driven search it replaces — the seed TSIA (core.tsia, one host
+solve per visited pattern) and PR 1's batched TSIA (incremental.solve_host,
+one host solve per assigning iteration) — while issuing exactly ONE host
+solve call for the entire search.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sroa, tsia, wireless
+from repro.core.system_model import evaluate
+from repro.fleet import batch as fbatch
+from repro.fleet import engine as fengine
+from repro.fleet import incremental
+
+CFG = sroa.SroaConfig(b_iters=30, f_iters=24, p_iters=20, t_iters=28)
+LAM = 1.0
+SPEC = dataclasses.replace(wireless.ScenarioSpec(), N=10, M=3)
+
+
+@pytest.fixture(scope="module")
+def scn10():
+    return wireless.draw_scenario(3, SPEC)
+
+
+# ----------------------------------------------------- candidate generation
+def _host_rows(assign, M, movable=None):
+    rows = incremental.candidate_assigns(np.asarray(assign), M, movable)
+    return {r.tobytes() for r in rows}
+
+
+def test_candidate_assigns_device_matches_host():
+    assign = jnp.asarray([0, 2, 1, 1, 0], jnp.int32)
+    cands, valid = fbatch.candidate_assigns_device(assign, 3)
+    assert cands.shape == (1 + 5 * 2, 5)
+    assert bool(valid.all())
+    got = {np.asarray(c).tobytes() for c in cands}
+    assert got == _host_rows(assign, 3)
+
+
+def test_candidate_assigns_device_fixed_shape_under_mask():
+    """Churn toggles validity flags, never shapes (no recompiles)."""
+    assign = jnp.asarray([0, 2, 1, 1, 0], jnp.int32)
+    movable = jnp.asarray([True, False, True, True, False])
+    cands, valid = fbatch.candidate_assigns_device(assign, 3, movable)
+    assert cands.shape == (11, 5)            # same A as the unmasked call
+    assert int(valid.sum()) == 1 + 3 * 2     # current + movable moves
+    got = {np.asarray(c).tobytes() for c in cands[np.asarray(valid)]}
+    assert got == _host_rows(assign, 3, np.asarray(movable))
+    # Invalid rows only ever move non-movable users.
+    for r in np.flatnonzero(~np.asarray(valid)):
+        changed = np.flatnonzero(np.asarray(cands[r]) != np.asarray(assign))
+        assert not np.asarray(movable)[changed].any()
+
+
+# ------------------------------------------------------- escape (Def 1 / 2)
+def test_escape_move_matches_definition_1_2():
+    """Hand-checked fixture for the paper's Definition 1/2 choice.
+
+    Edges: R_m = [5, 1, 3], members {0: users 0,1; 1: user 2; 2: none}.
+    Costly edge (argmax R_m over OCCUPIED) = 0; economic edge (argmin
+    R_m) = 1; costly user (argmax b within edge 0) = user 1 (b=7 > 2).
+    """
+    assign = jnp.asarray([0, 0, 1], jnp.int32)
+    R_m = jnp.asarray([5.0, 1.0, 3.0])
+    b = jnp.asarray([2.0, 7.0, 1.0])
+    mask = jnp.ones(3, bool)
+    user, m_plus, m_minus, ok = fengine.escape_move(assign, R_m, b, mask, 3)
+    assert (int(user), int(m_plus), int(m_minus), bool(ok)) == (1, 0, 1,
+                                                                True)
+
+
+def test_escape_move_skips_empty_costly_edge():
+    """An empty edge can have the max R_m but is never 'costly' (Def 1)."""
+    assign = jnp.asarray([0, 0, 1], jnp.int32)
+    R_m = jnp.asarray([1.0, 2.0, 9.0])     # edge 2 priciest but EMPTY
+    b = jnp.asarray([1.0, 2.0, 3.0])
+    mask = jnp.ones(3, bool)
+    user, m_plus, m_minus, ok = fengine.escape_move(assign, R_m, b, mask, 3)
+    assert int(m_plus) == 1                # occupied argmax, not edge 2
+    assert int(m_minus) == 0
+    assert int(user) == 2 and bool(ok)
+
+
+def test_escape_move_undefined_when_degenerate():
+    """m+ == m- (single occupied edge that is also cheapest) -> no move."""
+    assign = jnp.asarray([0, 0], jnp.int32)
+    R_m = jnp.asarray([1.0, 5.0])          # edge 1 empty; min is edge 0
+    b = jnp.asarray([1.0, 2.0])
+    _, _, _, ok = fengine.escape_move(assign, R_m, b, jnp.ones(2, bool), 2)
+    assert not bool(ok)
+
+
+# ------------------------------------------------------------------- parity
+def test_engine_single_call_dominates_host_and_seed(scn10):
+    """Engine best R <= seed TSIA and <= PR 1 batched TSIA; 1 host call."""
+    seed_res = tsia.solve(scn10, lam=LAM, cfg=CFG)
+    host = incremental.solve_host(scn10, lam=LAM, cfg=CFG, max_rounds=24,
+                                  escape_iters=4)
+    ours = incremental.solve(scn10, lam=LAM, cfg=CFG, max_rounds=24,
+                             escape_iters=4)
+    assert ours.R <= seed_res.R * (1 + 1e-6), (ours.R, seed_res.R)
+    assert ours.R <= host.R * (1 + 1e-6), (ours.R, host.R)
+    assert ours.history.solve_calls == 1
+    assert ours.history.candidates_evaluated > ours.history.rounds
+    # The reported allocation really scores to the reported objective.
+    cb = evaluate(scn10, jnp.asarray(ours.assign), ours.sroa.b,
+                  ours.sroa.f, ours.sroa.p, LAM)
+    np.testing.assert_allclose(float(cb.R), ours.R, rtol=1e-5)
+
+
+def test_engine_trace_is_consistent(scn10):
+    res = fengine.solve_assignment(scn10, lam=LAM, cfg=CFG, max_rounds=24,
+                                   escape_iters=4)
+    rounds = int(res.rounds)
+    assert rounds >= 1
+    valid = np.asarray(res.trace.rounds_valid)
+    assert valid[:rounds].all() and not valid[rounds:].any()
+    R_best = np.asarray(res.trace.R_best)[:rounds]
+    assert (np.diff(R_best) <= 1e-6).all()          # best-ever is monotone
+    np.testing.assert_allclose(R_best[-1], float(res.R), rtol=1e-5)
+    moves = np.asarray(res.trace.moves)[:rounds]
+    moved = moves[:, 4].astype(bool)
+    assert (moves[moved, 1] != moves[moved, 2]).all()    # src != dst
+    assert (moves[moved, 2] < scn10.M).all()
+    # Replaying the moves from the init pattern stays a valid trajectory.
+    a = np.array(wireless.nearest_edge_assignment(scn10))
+    for user, src, dst, kind, mv in moves:
+        if mv:
+            assert a[user] == src
+            a[user] = dst
+
+
+def test_engine_masked_users_never_move(scn10):
+    mask = np.ones(scn10.N, bool)
+    mask[[1, 4, 7]] = False
+    init = np.asarray(wireless.nearest_edge_assignment(scn10))
+    res = incremental.solve(scn10, lam=LAM, cfg=CFG, init_assign=init,
+                            max_rounds=12, escape_iters=2, mask=mask)
+    np.testing.assert_array_equal(res.assign[~mask], init[~mask])
+    assert np.isfinite(res.R)
+
+
+def test_engine_zero_rounds_degenerate(scn10):
+    """max_rounds=0 still returns a scored nearest-edge plan."""
+    res = incremental.solve(scn10, lam=LAM, cfg=CFG, max_rounds=0)
+    init = np.asarray(wireless.nearest_edge_assignment(scn10))
+    np.testing.assert_array_equal(res.assign, init)
+    assert np.isfinite(res.R) and res.history.solve_calls == 1
+
+
+# -------------------------------------------------------------- fleet vmap
+@pytest.mark.slow
+def test_fleet_engine_matches_per_cell_searches():
+    """vmap'd fleet search == per-cell engine calls, bit-for-bit R."""
+    fleet = fbatch.draw_fleet(5, 3, SPEC, n_range=(6, 10))
+    out = fengine.solve_fleet_assignments(fleet, lam=LAM, cfg=CFG,
+                                          max_rounds=10, escape_iters=2)
+    out = jax.tree.map(np.asarray, out)
+    for i in range(fleet.C):
+        one = incremental.solve(fleet.cell(i), lam=LAM, cfg=CFG,
+                                max_rounds=10, escape_iters=2)
+        n = int(fleet.n_users[i])
+        np.testing.assert_allclose(float(out.R[i]), one.R, rtol=1e-5)
+        np.testing.assert_array_equal(out.assign[i][:n], one.assign)

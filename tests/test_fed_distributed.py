@@ -6,6 +6,12 @@ import sys
 import textwrap
 from pathlib import Path
 
+import pytest
+
+# An 8-virtual-device subprocess run of the full distributed pipeline:
+# by far the most expensive test in the repo -> full-suite lane only.
+pytestmark = pytest.mark.slow
+
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 SCRIPT = textwrap.dedent("""

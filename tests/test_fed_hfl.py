@@ -35,6 +35,7 @@ def test_paper_cnn_sizes():
         assert logits.shape == (2, 10)
 
 
+@pytest.mark.slow
 def test_hfl_learns(setup):
     ds, cfg, w0, x_u, y_u, mask, sizes, assign = setup
     hcfg = HflConfig(L=2, K=2, I=6, lr=0.1)
@@ -44,6 +45,7 @@ def test_hfl_learns(setup):
     assert hist["acc"][-1] > hist["acc"][0]
 
 
+@pytest.mark.slow
 def test_hfl_matches_fl_at_m1_k1(setup):
     """FL is the M=1, K=1 special case — same global update."""
     ds, cfg, w0, x_u, y_u, mask, sizes, assign = setup
@@ -75,6 +77,7 @@ def test_hfl_aggregation_preserves_weighted_mean(setup):
         np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_straggler_dropping_still_learns(setup):
     ds, cfg, w0, x_u, y_u, mask, sizes, assign = setup
     rng = np.random.default_rng(0)

@@ -40,6 +40,7 @@ def test_solve_batch_matches_looped_solve_64_cells():
         assert bool(out.feasible[i])
 
 
+@pytest.mark.slow
 def test_solve_batch_heterogeneous_padding():
     """Cells with different user counts match their unpadded solves."""
     fleet = fbatch.draw_fleet(1, 6, SPEC, n_range=(6, 14))
