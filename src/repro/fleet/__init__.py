@@ -7,6 +7,9 @@
 * :mod:`repro.fleet.incremental` — engine front end + PR 1 host reference
   loop and warm-start re-planning.
 * :mod:`repro.fleet.planner`     — the cached :class:`FleetPlanner` facade.
+* :mod:`repro.fleet.service`     — the streaming control plane
+  (tick loop, drift-gated replanning, request coalescing, sharding,
+  telemetry) serving live traffic over all of the above.
 """
 from repro.fleet.batch import (FleetScenario, candidate_assigns_device,
                                draw_fleet, fleet_assignments, fleet_constants,
@@ -14,6 +17,8 @@ from repro.fleet.batch import (FleetScenario, candidate_assigns_device,
 from repro.fleet.engine import (EngineResult, EngineTrace, solve_assignment,
                                 solve_fleet_assignments)
 from repro.fleet.planner import FleetPlanner, PlanResult, scenario_digest
+from repro.fleet.service import (PlanningService, ServiceConfig,
+                                 solve_fleet_sharded)
 
 __all__ = [
     "FleetScenario", "candidate_assigns_device", "draw_fleet",
@@ -22,4 +27,5 @@ __all__ = [
     "EngineResult", "EngineTrace", "solve_assignment",
     "solve_fleet_assignments",
     "FleetPlanner", "PlanResult", "scenario_digest",
+    "PlanningService", "ServiceConfig", "solve_fleet_sharded",
 ]

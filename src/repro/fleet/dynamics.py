@@ -156,6 +156,152 @@ def churn_step(scn: Scenario, state: DynamicsState,
                                      dropped=dropped)
 
 
+# ----------------------------------------------------------- fleet-level step
+class FleetDynamicsState(NamedTuple):
+    """Stacked host-side dynamics state for a whole fleet (leading C axis)."""
+
+    velocity: np.ndarray      # (C, N, 2) m/s Gauss-Markov velocities
+    shadow_ue_db: np.ndarray  # (C, N, M) log-normal shadowing user -> edge
+    active: np.ndarray        # (C, N) bool — slot currently holds a live user
+    t: float                  # simulation clock (s)
+    step: int                 # ticks executed (drives the fading cadence)
+
+
+class FleetEvents(NamedTuple):
+    """What one :func:`fleet_step` tick did to each cell."""
+
+    changed: np.ndarray   # (C,) bool — any scenario leaf of the cell changed
+    arrived: np.ndarray   # (C, N) bool — slot (re)occupied this tick
+    departed: np.ndarray  # (C, N) bool — slot freed this tick
+    dropped: np.ndarray   # (C,) int — arrivals lost (no free slot)
+    faded: bool           # this tick crossed a block-fading boundary
+
+
+def _fleet_gains(pos: np.ndarray, edge_pos: np.ndarray,
+                 shadow_db: np.ndarray) -> np.ndarray:
+    """(C, N, M) linear gains from stacked geometry + shadowing."""
+    d = np.linalg.norm(pos[:, :, None, :] - edge_pos[:, None, :, :], axis=-1)
+    return 10.0 ** (-(path_loss_db(d / 1000.0) + shadow_db) / 10.0)
+
+
+def recover_fleet_shadowing(fleet) -> np.ndarray:
+    """Back out the (C, N, M) shadowing draw of every cell at once."""
+    pos = np.asarray(fleet.cells.user_pos, np.float64)
+    ep = np.asarray(fleet.cells.edge_pos, np.float64)
+    d = np.linalg.norm(pos[:, :, None, :] - ep[:, None, :, :], axis=-1)
+    pl_db = path_loss_db(d / 1000.0)
+    gain_db = 10.0 * np.log10(
+        np.maximum(np.asarray(fleet.cells.gain, np.float64), 1e-300))
+    return -gain_db - pl_db
+
+
+def init_fleet_state(fleet, seed: int = 0,
+                     mean_speed: float = 1.5) -> FleetDynamicsState:
+    """Initial stacked dynamics state consistent with the drawn fleet."""
+    rng = np.random.default_rng(seed)
+    C, N = fleet.C, fleet.N_max
+    vel = rng.normal(0.0, mean_speed / np.sqrt(2.0), size=(C, N, 2))
+    return FleetDynamicsState(velocity=vel,
+                              shadow_ue_db=recover_fleet_shadowing(fleet),
+                              active=np.asarray(fleet.mask, bool).copy(),
+                              t=0.0, step=0)
+
+
+def fleet_step(fleet, state: FleetDynamicsState, rng: np.random.Generator,
+               cfg: "StreamConfig | None" = None,
+               spec: ScenarioSpec | None = None,
+               cell_mask: np.ndarray | None = None
+               ) -> tuple["object", FleetDynamicsState, FleetEvents]:
+    """Advance mobility + fading + churn for EVERY cell in one batched step.
+
+    The per-cell generators above loop one scenario at a time; a control
+    plane ticking thousands of cells cannot afford C Python round trips per
+    tick, so this advances all (C, N) users with stacked array arithmetic.
+    ``cell_mask`` selects which cells see dynamics this tick (None = all);
+    unmasked cells keep every scenario leaf BIT-IDENTICAL — the drift
+    detector and plan cache rely on that exactness.  Randomness is consumed
+    for all cells regardless of ``cell_mask``, so two services replaying
+    the same seed see the same trace whatever they chose to replan.
+
+    Returns the advanced fleet (mask/n_users follow the churned activity),
+    the new state, and a :class:`FleetEvents` record.
+    """
+    cfg = cfg or StreamConfig()
+    spec = spec or ScenarioSpec()
+    C, N, M = fleet.C, fleet.N_max, fleet.M
+    cm = (np.ones(C, bool) if cell_mask is None
+          else np.asarray(cell_mask, bool))
+    edge_pos = np.asarray(fleet.cells.edge_pos, np.float64)
+
+    # Mobility (Gauss-Markov, reflected walls) — every cell at once.
+    sigma = cfg.mean_speed / np.sqrt(2.0)
+    noise = rng.normal(0.0, sigma, size=(C, N, 2))
+    vel = cfg.memory * state.velocity + np.sqrt(
+        1.0 - cfg.memory ** 2) * noise
+    raw = np.asarray(fleet.cells.user_pos, np.float64) + vel * cfg.dt
+    pos = np.abs(raw)
+    pos = cfg.side_m - np.abs(cfg.side_m - pos)
+    vel = np.where((raw < 0.0) | (raw > cfg.side_m), -vel, vel)
+    sel = cm[:, None, None]
+    pos = np.where(sel, pos, np.asarray(fleet.cells.user_pos, np.float64))
+    vel = np.where(sel, vel, state.velocity)
+
+    # Block fading boundary: redraw shadowing for the selected cells.
+    step = state.step + 1
+    faded = bool(cfg.fading_every) and step % cfg.fading_every == 0
+    shadow_draw = rng.normal(0.0, spec.shadow_std_db, size=(C, N, M))
+    shadow = (np.where(cm[:, None, None], shadow_draw, state.shadow_ue_db)
+              if faded else state.shadow_ue_db.copy())
+
+    # Churn: vectorized departures, per-slot arrival redraws (rare events).
+    active = state.active.copy()
+    c = np.asarray(fleet.cells.c, np.float64).copy()
+    D = np.asarray(fleet.cells.D, np.float64).copy()
+    leave_p = 1.0 - np.exp(-cfg.departure_rate * cfg.dt)
+    departed = (active & (rng.uniform(size=(C, N)) < leave_p)
+                & cm[:, None])
+    active &= ~departed
+    n_arr = rng.poisson(cfg.arrival_rate * cfg.dt, size=C) * cm
+    arrived = np.zeros((C, N), bool)
+    dropped = np.zeros(C, np.int64)
+    for i in np.flatnonzero(n_arr):
+        free = np.flatnonzero(~active[i])
+        take = free[:n_arr[i]]
+        dropped[i] = max(0, int(n_arr[i]) - free.size)
+        for slot in take:
+            active[i, slot] = True
+            arrived[i, slot] = True
+            pos[i, slot] = rng.uniform(0.0, cfg.side_m, size=2)
+            c[i, slot] = rng.uniform(*spec.c_range)
+            D[i, slot] = rng.uniform(spec.D_range[0], spec.D_range[1])
+            shadow[i, slot] = rng.normal(0.0, spec.shadow_std_db, size=M)
+            vel[i, slot] = rng.normal(0.0, cfg.mean_speed / np.sqrt(2.0),
+                                      size=2)
+
+    changed = cm | arrived.any(axis=1) | departed.any(axis=1)
+    gain = _fleet_gains(pos, edge_pos, shadow)
+    # Unchanged cells keep their exact previous leaves (bit-identity).
+    keep = ~changed[:, None]
+    gain = np.where(keep[..., None], np.asarray(fleet.cells.gain,
+                                                np.float64), gain)
+    pos = np.where(keep[..., None], np.asarray(fleet.cells.user_pos,
+                                               np.float64), pos)
+    cells = fleet.cells._replace(
+        user_pos=jnp.asarray(pos, jnp.float32),
+        gain=jnp.asarray(gain, jnp.float32),
+        c=jnp.asarray(c, jnp.float32),
+        D=jnp.asarray(D, jnp.float32))
+    fleet2 = fleet._replace(cells=cells, mask=jnp.asarray(active),
+                            n_users=jnp.asarray(active.sum(axis=1),
+                                                jnp.int32))
+    state2 = FleetDynamicsState(velocity=vel, shadow_ue_db=shadow,
+                                active=active, t=state.t + cfg.dt,
+                                step=step)
+    return fleet2, state2, FleetEvents(changed=changed, arrived=arrived,
+                                       departed=departed, dropped=dropped,
+                                       faded=faded)
+
+
 @dataclasses.dataclass(frozen=True)
 class StreamConfig:
     """Cadence knobs for :func:`stream` (all rates per simulated second)."""

@@ -31,7 +31,10 @@ def scenario_digest(scn: Scenario, lam, mask=None, extra: bytes = b"") -> str:
     h = hashlib.sha1()
     for leaf in jax.tree.leaves(scn):
         a = np.asarray(leaf)
+        # dtype is part of the identity: int32/float32 zeros (for example)
+        # share shape AND bytes but are different planning problems.
         h.update(str(a.shape).encode())
+        h.update(str(a.dtype).encode())
         h.update(a.tobytes())
     h.update(np.float64(lam).tobytes())
     if mask is not None:
@@ -154,10 +157,19 @@ class FleetPlanner:
         self._insert(key, plan)
         return plan
 
+    @staticmethod
+    def _warm_assign(w) -> np.ndarray | None:
+        """Normalize a warm start: PlanResult, array, or None."""
+        if w is None:
+            return None
+        return np.asarray(getattr(w, "assign", w), np.int32)
+
     def plan_fleet(self, fleet: fbatch.FleetScenario,
                    warm: list | None = None) -> list[PlanResult]:
         """Plan every cell of a fleet (per-cell cache + warm starts).
 
+        ``warm`` entries may be :class:`PlanResult`\\ s or raw assignment
+        arrays (``serve.run_planner`` threads arrays through), or None.
         With the engine enabled and no warm starts, the cold cells are
         planned through :meth:`plan_fleet_batched` — every cell's full
         assignment search in ONE jitted call — instead of cell-by-cell.
@@ -166,8 +178,7 @@ class FleetPlanner:
         if self.use_engine and all(w is None for w in warm):
             return self.plan_fleet_batched(fleet)
         return [self.plan(fleet.cell(i),
-                          warm_assign=None if warm[i] is None
-                          else warm[i].assign)
+                          warm_assign=self._warm_assign(warm[i]))
                 for i in range(fleet.C)]
 
     def plan_fleet_batched(self,

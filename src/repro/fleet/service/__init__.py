@@ -1,0 +1,30 @@
+"""Continuous planning service: a streaming control plane over the fleet
+engine (DESIGN.md D8).
+
+* :mod:`repro.fleet.service.control`   — the clocked tick loop
+  (:class:`PlanningService`): dynamics -> drift -> selective replan ->
+  serve.
+* :mod:`repro.fleet.service.drift`     — channel/objective staleness
+  scoring against a replan threshold.
+* :mod:`repro.fleet.service.queue`     — thread-safe request mailbox with
+  per-tick coalescing.
+* :mod:`repro.fleet.service.shard`     — `shard_map` of the engine over
+  the cell axis (graceful single-device fallback).
+* :mod:`repro.fleet.service.telemetry` — plans/sec, replan fraction,
+  latency percentiles, drift histogram (JSON).
+* :mod:`repro.fleet.service.loadgen`   — Poisson open-loop load driver.
+"""
+from repro.fleet.service.control import (PlanningService, ServiceConfig,
+                                         TickRecord)
+from repro.fleet.service.drift import DriftConfig, DriftReport
+from repro.fleet.service.loadgen import run_load
+from repro.fleet.service.queue import CoalescingQueue, PlanRequest
+from repro.fleet.service.shard import solve_fleet_sharded
+from repro.fleet.service.telemetry import Telemetry
+
+__all__ = [
+    "PlanningService", "ServiceConfig", "TickRecord",
+    "DriftConfig", "DriftReport",
+    "CoalescingQueue", "PlanRequest",
+    "Telemetry", "run_load", "solve_fleet_sharded",
+]

@@ -1,0 +1,269 @@
+"""The planning control plane: a clocked loop that owns a live fleet.
+
+:class:`PlanningService` turns the fleet engine's "one fast jitted call"
+into a streaming system.  Each :meth:`tick`:
+
+1. **advances dynamics** for the whole fleet in one batched step
+   (:func:`repro.fleet.dynamics.fleet_step` — mobility / block fading /
+   churn; unchanged cells stay bit-identical);
+2. **re-prices** every cell's cached assignment under the new channel with
+   ONE batched SROA call (`FleetPlanner.allocate_fleet` — the cheap data
+   plane), so every response always carries a current b/f/p allocation;
+3. **scores drift** (:mod:`repro.fleet.service.drift`) and re-searches
+   assignments ONLY for cells past a replan threshold (plus churn
+   arrivals), warm-started from the cached plans, batched as a sliced
+   sub-fleet through the device-resident engine — sharded over devices
+   when more than one is visible (:mod:`repro.fleet.service.shard`).
+   Replan sets are padded to power-of-two buckets so the engine compiles
+   O(log C) programs, not one per subset size;
+4. **serves** every queued request with the tick's plan snapshot —
+   concurrent requests coalesce into that single engine call
+   (:mod:`repro.fleet.service.queue`).
+
+Telemetry (plans/sec, replan fraction, latency percentiles, drift
+histogram) accumulates in :mod:`repro.fleet.service.telemetry`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sroa
+from repro.core.wireless import Scenario, ScenarioSpec
+from repro.fleet import batch as fbatch
+from repro.fleet import dynamics
+from repro.fleet.planner import FleetPlanner, PlanResult, scenario_digest
+from repro.fleet.service import drift as fdrift
+from repro.fleet.service import shard as fshard
+from repro.fleet.service.queue import CoalescingQueue, PlanRequest
+from repro.fleet.service.telemetry import Telemetry
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Control-plane knobs (solver knobs live on the FleetPlanner)."""
+
+    drift: fdrift.DriftConfig = fdrift.DriftConfig()
+    stream: dynamics.StreamConfig = dynamics.StreamConfig()
+    event_rate: float = 1.0    # fraction of cells advanced per tick
+    replan_all: bool = False   # baseline: re-search every cell every tick
+    max_rounds: int = 12       # engine budget per re-search
+    escape_iters: int = 2
+    warm_start: bool = True    # seed re-searches from the cached plans
+    bucket: bool = True        # pad replan sets to power-of-two buckets
+    shard: bool = True         # shard the cell axis over visible devices
+
+
+class TickRecord(NamedTuple):
+    tick: int
+    changed: int               # cells that saw dynamics this tick
+    replanned: np.ndarray      # cell indices re-searched this tick
+    engine_calls: int          # assignment-search calls spent (0 or 1)
+    sum_R: float               # repriced objective summed over cells
+    served: int                # requests answered this tick
+    coalesced: int             # largest request group sharing the call
+    tick_ms: float
+    drift: fdrift.DriftReport | None
+
+
+class PlanningService:
+    """Streaming planning endpoint over one live fleet."""
+
+    def __init__(self, fleet: fbatch.FleetScenario, lam: float = 1.0,
+                 sroa_cfg: sroa.SroaConfig | None = None,
+                 cfg: ServiceConfig = ServiceConfig(),
+                 planner: FleetPlanner | None = None,
+                 spec: ScenarioSpec | None = None, seed: int = 0,
+                 devices=None):
+        self.cfg = cfg
+        self.spec = spec or ScenarioSpec()
+        self.planner = planner or FleetPlanner(
+            lam=lam, cfg=sroa_cfg or sroa.SroaConfig(),
+            max_rounds=cfg.max_rounds, escape_iters=cfg.escape_iters)
+        self.lam = self.planner.lam
+        self.sroa_cfg = self.planner.cfg
+        self.mesh = fshard.cell_mesh(devices) if cfg.shard else None
+        self.state = dynamics.init_fleet_state(
+            fleet, seed=seed, mean_speed=cfg.stream.mean_speed)
+        self.fleet = fleet._replace(mask=jnp.asarray(self.state.active))
+        self.rng = np.random.default_rng(seed + 1)
+        self.queue = CoalescingQueue()
+        self.telemetry = Telemetry()
+        self.tick_idx = 0
+        self._bootstrap()
+
+    # -------------------------------------------------------------- engine
+    def _engine(self, fleet, init_assigns):
+        return fshard.solve_fleet_sharded(
+            fleet, init_assigns, self.lam, self.sroa_cfg,
+            self.cfg.max_rounds, self.cfg.escape_iters, mesh=self.mesh)
+
+    def _reprice(self) -> sroa.SroaResult:
+        """Batched SROA of the current assignments under the live channel."""
+        res = self.planner.allocate_fleet(self.fleet,
+                                          jnp.asarray(self.assigns))
+        return jax.tree.map(np.asarray, res)
+
+    def _bootstrap(self) -> None:
+        out = self._engine(self.fleet, None)
+        self.assigns = np.asarray(out.assign).copy()
+        self.alloc = self._reprice()
+        self.gain_ref = np.asarray(self.fleet.cells.gain,
+                                   np.float64).copy()
+        self.R_ref = np.asarray(self.alloc.R, np.float64).copy()
+        self._install_cache(np.arange(self.fleet.C))
+
+    def prewarm(self) -> None:
+        """Compile the engine for every replan-bucket size (and the mesh).
+
+        Optional: without it the first tick that hits a new bucket size
+        pays its compile inline, which pollutes latency percentiles.
+        """
+        C = self.fleet.C
+        b = 1
+        sizes = []
+        while b < C:
+            sizes.append(b)
+            b <<= 1
+        sizes.append(C)  # full-fleet replans trace differently from the
+        #                  init=None bootstrap call — compile them too
+        for b in sizes:
+            idx = np.arange(b) % C
+            sub = jax.tree.map(lambda x, i=idx: x[jnp.asarray(i)],
+                               self.fleet)
+            self._engine(sub, jnp.asarray(self.assigns[idx]))
+
+    # --------------------------------------------------------------- cache
+    def _cell_row(self, i: int) -> Scenario:
+        """Cell i as a full-width (padded) Scenario row."""
+        return jax.tree.map(lambda x: x[i], self.fleet.cells)
+
+    def _install_cache(self, idx: np.ndarray) -> None:
+        """Publish fresh plans into the FleetPlanner's LRU cache."""
+        for i in np.asarray(idx, int):
+            mask = self.state.active[i]
+            key = scenario_digest(self._cell_row(i), self.lam,
+                                  None if mask.all() else mask)
+            plan = PlanResult(
+                assign=self.assigns[i].copy(), b=self.alloc.b[i],
+                f=self.alloc.f[i], p=self.alloc.p[i],
+                R=float(self.alloc.R[i]), t=float(self.alloc.t[i]),
+                cached=False, solve_calls=0, plan_ms=0.0)
+            self.planner._insert(key, plan)
+
+    # -------------------------------------------------------------- replan
+    def _bucket(self, k: int) -> int:
+        if not self.cfg.bucket:
+            return k
+        b = 1
+        while b < k:
+            b <<= 1
+        return min(b, self.fleet.C)
+
+    def _replan(self, idx: np.ndarray,
+                ev: dynamics.FleetEvents | None) -> None:
+        """One engine call re-searching the drifted cells (bucket-padded)."""
+        k = idx.size
+        pidx = np.concatenate(
+            [idx, np.full(self._bucket(k) - k, idx[0], idx.dtype)])
+        jidx = jnp.asarray(pidx)
+        sub = jax.tree.map(lambda x: x[jidx], self.fleet)
+        init = None
+        if self.cfg.warm_start:
+            init = self.assigns[pidx].copy()
+            if ev is not None and ev.arrived[pidx].any():
+                # Churn arrivals have no searched assignment yet: seed them
+                # at their nearest edge (Alg 5 line 5) before the polish.
+                ne = np.asarray(fbatch.fleet_assignments(sub))
+                init = np.where(ev.arrived[pidx], ne, init)
+            init = jnp.asarray(init, jnp.int32)
+        out = self._engine(sub, init)
+        self.assigns[idx] = np.asarray(out.assign)[:k]
+
+    # ---------------------------------------------------------------- serve
+    def submit(self) -> PlanRequest:
+        """Enqueue a plan request; the next tick resolves it."""
+        self.telemetry.requests += 1
+        return self.queue.submit(key=self.tick_idx)
+
+    def tick(self, advance: bool = True) -> TickRecord:
+        """One control-plane tick: dynamics, drift, replan, serve."""
+        t0 = time.perf_counter()
+        C = self.fleet.C
+        ev = None
+        if advance:
+            cm = self.rng.uniform(size=C) < self.cfg.event_rate
+            self.fleet, self.state, ev = dynamics.fleet_step(
+                self.fleet, self.state, self.rng, cfg=self.cfg.stream,
+                spec=self.spec, cell_mask=cm)
+
+        gain_now = np.asarray(self.fleet.cells.gain, np.float64)
+        alloc = self._reprice()
+        alloc_calls = 1
+        report = fdrift.score(gain_now, self.gain_ref, self.state.active,
+                              np.asarray(alloc.R), self.R_ref,
+                              self.cfg.drift)
+        forced = (ev.arrived.any(axis=1) if ev is not None
+                  else np.zeros(C, bool))
+        if self.cfg.replan_all:
+            idx = np.arange(C)
+        else:
+            idx = np.flatnonzero(report.replan | forced)
+
+        engine_calls = 0
+        if idx.size:
+            self._replan(idx, ev)
+            engine_calls = 1
+            alloc = self._reprice()
+            alloc_calls += 1
+            self.gain_ref[idx] = gain_now[idx]
+        self.alloc = alloc
+        R_now = np.asarray(alloc.R, np.float64)
+        if idx.size:
+            self.R_ref[idx] = R_now[idx]
+            self._install_cache(idx)
+        sum_R = float(R_now.sum())
+
+        groups = self.queue.drain()
+        tick_ms = (time.perf_counter() - t0) * 1e3
+        replanned = set(int(i) for i in idx)
+        base = {
+            "tick": self.tick_idx,
+            "objective": sum_R,
+            "R": R_now.tolist(),
+            "assign": self.assigns.tolist(),
+            "replanned": sorted(replanned),
+            "cached": [i not in replanned for i in range(C)],
+            "drift_channel": report.channel.tolist(),
+            "plan_ms": tick_ms,
+        }
+        served = 0
+        coalesced = 0
+        for reqs in groups.values():
+            resp = dict(base, coalesced=len(reqs))
+            coalesced = max(coalesced, len(reqs))
+            for r in reqs:
+                self.telemetry.record_request(r.resolve(resp))
+                served += 1
+        changed = int(ev.changed.sum()) if ev is not None else 0
+        self.telemetry.record_tick(
+            n_cells=C, n_changed=changed, n_replanned=idx.size,
+            engine_calls=engine_calls, alloc_calls=alloc_calls,
+            sum_R=sum_R, tick_ms=tick_ms, drift_scores=report.channel,
+            coalesced=coalesced)
+        rec = TickRecord(tick=self.tick_idx, changed=changed,
+                         replanned=np.asarray(idx),
+                         engine_calls=engine_calls, sum_R=sum_R,
+                         served=served, coalesced=coalesced,
+                         tick_ms=tick_ms, drift=report)
+        self.tick_idx += 1
+        return rec
+
+    def run(self, ticks: int) -> list[TickRecord]:
+        """Advance the control plane ``ticks`` times (no request load)."""
+        return [self.tick() for _ in range(ticks)]

@@ -1,0 +1,89 @@
+"""Multi-device sharding of the fleet engine over the cell axis.
+
+D5 padding makes every per-cell shape static, so a fleet shards trivially:
+``shard_map`` splits the leading (C,) axis across a 1-D device mesh and
+each device runs the vmapped device-resident search
+(:func:`repro.fleet.engine.engine_core`) on its local cells — no
+cross-device communication at all (cells are independent problems).
+
+On a single device (CPU CI, laptops) :func:`solve_fleet_sharded` degrades
+to the plain jitted :func:`repro.fleet.engine.solve_fleet_assignments`
+call — same results, same API.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import sroa
+from repro.fleet import batch as fbatch
+from repro.fleet import engine as fengine
+from repro.runtime.sharding import cell_mesh  # noqa: F401  (re-export)
+
+
+@lru_cache(maxsize=None)
+def _sharded_solver(mesh: Mesh, cfg: sroa.SroaConfig, max_rounds: int,
+                    escape_iters: int):
+    """Build (once per mesh/config) the jitted shard-mapped fleet solver."""
+    axis = mesh.axis_names[0]
+
+    def local(cells, init, mask, lam_v):
+        def one(cell, ia, mk, lam):
+            return fengine.engine_core(cell, ia, mk, lam, cfg, max_rounds,
+                                       escape_iters)
+        return jax.vmap(one)(cells, init, mask, lam_v)
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(axis), P(axis), P(axis), P(axis)),
+                   out_specs=P(axis),
+                   # the engine is a lax.while_loop, which has no
+                   # replication rule — and needs none: every input and
+                   # output is fully sharded over the cell axis.
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+def _pad_rows(tree, pad: int):
+    """Pad every leaf's leading axis by repeating the last row."""
+    return jax.tree.map(
+        lambda x: jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)]),
+        tree)
+
+
+def solve_fleet_sharded(fleet: fbatch.FleetScenario,
+                        init_assigns: jnp.ndarray | None = None,
+                        lam=1.0,
+                        cfg: sroa.SroaConfig = sroa.SroaConfig(),
+                        max_rounds: int = 48, escape_iters: int = 6,
+                        mesh: Mesh | None = None) -> fengine.EngineResult:
+    """Fleet-wide assignment search, sharded over devices when available.
+
+    ``mesh`` is a 1-D cell mesh (``repro.runtime.sharding.cell_mesh``);
+    None runs the single-device path.  C is padded up to a multiple of the
+    device count by repeating the last cell (its duplicate rows are
+    dropped from the result), so any fleet size works on any mesh.
+    """
+    if init_assigns is None:
+        init_assigns = fbatch.fleet_assignments(fleet)
+    if mesh is None:
+        return fengine.solve_fleet_assignments(
+            fleet, init_assigns, lam, cfg, max_rounds, escape_iters)
+    C = fleet.C
+    ndev = int(np.prod(mesh.devices.shape))
+    pad = (-C) % ndev
+    init = jnp.asarray(init_assigns, jnp.int32)
+    lam_v = jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (C,))
+    cells, mask = fleet.cells, fleet.mask
+    if pad:
+        cells, init, mask, lam_v = (_pad_rows(t, pad) for t in
+                                    (cells, init, mask, lam_v))
+    out = _sharded_solver(mesh, cfg, max_rounds, escape_iters)(
+        cells, init, mask, lam_v)
+    if pad:
+        out = jax.tree.map(lambda x: x[:C], out)
+    return out

@@ -7,14 +7,20 @@ by the dry-run):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
       --batch 4 --prompt-len 32 --new-tokens 16
 
-``--mode plan`` serves the fleet planning endpoint: it draws a
-heterogeneous fleet, plans every cell through the cached
-:class:`repro.fleet.planner.FleetPlanner`, then replays ``--rounds`` of
-scenario dynamics (mobility / fading / churn) with warm-started
-re-planning — unchanged cells are LRU cache hits:
+``--mode plan`` serves the fleet planning endpoint as a streaming control
+plane (:mod:`repro.fleet.service`): a clocked loop advances scenario
+dynamics (mobility / fading / churn) for the whole fleet each tick,
+re-prices every cached plan under the new channel, re-searches only the
+cells past the drift threshold, and answers the tick's (coalesced)
+Poisson request load from the plan table:
 
   PYTHONPATH=src python -m repro.launch.serve --mode plan \
       --cells 8 --rounds 3 --cell-users 12 --cell-edges 3
+
+``--no-stream`` keeps the pre-service request/response loop (per-cell
+``FleetPlanner.plan`` calls with warm starts) for parity checks;
+``--replan-all`` turns off drift gating (the re-search-everything
+baseline the benchmark compares against).
 """
 from __future__ import annotations
 
@@ -45,12 +51,10 @@ def plan_request(planner, scn, warm_assign=None, new_users=None,
     }
 
 
-def run_planner(args) -> dict:
-    """The ``--mode plan`` driver: fleet bring-up + dynamic re-planning."""
+def _draw_serve_fleet(args):
     from repro.core import sroa
     from repro.core.wireless import ScenarioSpec
-    from repro.fleet import FleetPlanner, draw_fleet
-    from repro.fleet import dynamics
+    from repro.fleet import draw_fleet
 
     spec = dataclasses.replace(ScenarioSpec(), N=args.cell_users,
                                M=args.cell_edges)
@@ -58,6 +62,50 @@ def run_planner(args) -> dict:
     fleet = draw_fleet(args.seed, args.cells, spec,
                        n_range=(n_lo, args.cell_users))
     cfg = sroa.SroaConfig(b_iters=30, f_iters=24, p_iters=20, t_iters=28)
+    return spec, fleet, cfg
+
+
+def run_service(args) -> dict:
+    """The streaming ``--mode plan`` driver (repro.fleet.service)."""
+    import json
+
+    from repro.fleet.service import (DriftConfig, PlanningService,
+                                     ServiceConfig, run_load)
+
+    spec, fleet, cfg = _draw_serve_fleet(args)
+    svc_cfg = ServiceConfig(
+        drift=DriftConfig(channel_threshold=args.drift_threshold,
+                          objective_threshold=args.obj_threshold),
+        event_rate=args.event_rate, replan_all=args.replan_all,
+        max_rounds=args.plan_rounds, escape_iters=2)
+    print(f"[serve] fleet: {fleet.C} cells, N_max={fleet.N_max}, "
+          f"M={fleet.M} (streaming control plane, "
+          f"{'replan-all' if args.replan_all else 'drift-gated'})")
+    t0 = time.time()
+    svc = PlanningService(fleet, lam=args.lam, sroa_cfg=cfg, cfg=svc_cfg,
+                          spec=spec, seed=args.seed)
+    print(f"[serve] bootstrap: sum R={float(svc.R_ref.sum()):.1f} "
+          f"in {time.time() - t0:.2f}s")
+
+    def on_tick(rec):
+        print(f"[serve] tick {rec.tick}: {rec.changed} changed, "
+              f"{rec.replanned.size} replanned, {rec.served} served "
+              f"(coalesced {rec.coalesced}), sum R={rec.sum_R:.1f}, "
+              f"{rec.tick_ms:.0f}ms")
+
+    snap = run_load(svc, ticks=args.rounds, req_per_tick=args.req_rate,
+                    seed=args.seed + 7, on_tick=on_tick)
+    print(f"[serve] telemetry: {json.dumps(snap)}")
+    return {"sum_R": snap["objective_sum"] / max(snap["ticks"], 1),
+            "stats": snap}
+
+
+def run_planner(args) -> dict:
+    """The ``--no-stream`` driver: per-cell request loop (pre-service)."""
+    from repro.fleet import FleetPlanner
+    from repro.fleet import dynamics
+
+    spec, fleet, cfg = _draw_serve_fleet(args)
     planner = FleetPlanner(lam=args.lam, cfg=cfg,
                            max_rounds=args.plan_rounds, escape_iters=2,
                            use_engine=not args.host_loop)
@@ -129,11 +177,25 @@ def main(argv=None):
                     help="per-round probability a cell sees dynamics")
     ap.add_argument("--host-loop", action="store_true",
                     help="plan via the PR 1 host-driven loop instead of "
-                         "the device-resident engine")
+                         "the device-resident engine (implies --no-stream)")
+    ap.add_argument("--no-stream", action="store_true",
+                    help="serve via the pre-service per-cell request loop "
+                         "instead of the streaming control plane")
+    ap.add_argument("--replan-all", action="store_true",
+                    help="streaming mode: disable drift gating (re-search "
+                         "every cell every tick — the bench baseline)")
+    ap.add_argument("--drift-threshold", type=float, default=0.25,
+                    help="channel-drift replan threshold (relative)")
+    ap.add_argument("--obj-threshold", type=float, default=0.02,
+                    help="objective-degradation replan threshold")
+    ap.add_argument("--req-rate", type=float, default=2.0,
+                    help="streaming mode: Poisson plan requests per tick")
     args = ap.parse_args(argv)
 
     if args.mode == "plan":
-        return run_planner(args)
+        if args.no_stream or args.host_loop:
+            return run_planner(args)
+        return run_service(args)
 
     from repro import configs
     from repro.models import transformer as tf

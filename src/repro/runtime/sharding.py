@@ -11,7 +11,21 @@ import dataclasses
 from typing import Optional
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def cell_mesh(devices=None, axis: str = "cells") -> Optional[Mesh]:
+    """1-D device mesh over the fleet's cell axis (D5 padding makes the
+    per-cell shapes static, so cells shard trivially).
+
+    Returns None on a single device — callers degrade to the unsharded
+    path (see ``repro.fleet.service.shard.solve_fleet_sharded``).
+    """
+    devices = list(jax.devices() if devices is None else devices)
+    if len(devices) < 2:
+        return None
+    return Mesh(np.array(devices), (axis,))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -212,3 +212,83 @@ def test_scenario_digest_sensitivity(scn16):
     assert d0 != scenario_digest(scn16, 2.0)
     bumped = scn16._replace(gain=scn16.gain * 1.0001)
     assert d0 != scenario_digest(bumped, 1.0)
+
+
+def test_scenario_digest_dtype_sensitivity():
+    """Leaves with identical shape AND bytes but different dtypes are
+    different planning problems (int32 zeros == float32 zeros bytewise)."""
+    f32 = {"x": np.zeros(4, np.float32)}
+    i32 = {"x": np.zeros(4, np.int32)}
+    assert f32["x"].tobytes() == i32["x"].tobytes()  # the trap
+    assert scenario_digest(f32, 1.0) != scenario_digest(i32, 1.0)
+    f64 = {"x": np.zeros(4, np.float64)}
+    assert scenario_digest(f32, 1.0) != scenario_digest(f64, 1.0)
+
+
+def test_scenario_digest_mask_sensitivity(scn16):
+    full = np.ones(16, bool)
+    part = full.copy()
+    part[3] = False
+    d_none = scenario_digest(scn16, 1.0, None)
+    assert d_none != scenario_digest(scn16, 1.0, part)
+    assert (scenario_digest(scn16, 1.0, part)
+            == scenario_digest(scn16, 1.0, part))
+
+
+def test_plan_all_true_mask_normalizes_to_unmasked(scn16):
+    """mask=all-True and mask=None are the same problem -> cache hit."""
+    pl = FleetPlanner(lam=LAM, cfg=CFG, max_rounds=6, escape_iters=1)
+    cold = pl.plan(scn16)
+    hit = pl.plan(scn16, mask=np.ones(16, bool))
+    assert not cold.cached and hit.cached
+    assert pl.stats["hits"] == 1
+
+
+def test_plan_fleet_warm_accepts_plans_arrays_and_none():
+    """`warm` entries may be PlanResults, raw arrays, or None (regression:
+    raw arrays used to crash on `warm[i].assign`)."""
+    spec = dataclasses.replace(wireless.ScenarioSpec(), N=16, M=3)
+    fleet = fbatch.draw_fleet(5, 3, spec, n_range=(16, 16))
+    pl = FleetPlanner(lam=LAM, cfg=CFG, max_rounds=6, escape_iters=1)
+    cold = pl.plan_fleet(fleet)
+    mixed = [cold[0],                                   # PlanResult
+             np.asarray(cold[1].assign, np.int32),      # raw ndarray
+             None]                                      # cold plan
+    plans = pl.plan_fleet(fleet, warm=mixed)
+    assert len(plans) == 3
+    for p in plans:
+        assert np.isfinite(p.R)
+        a = np.asarray(p.assign)
+        assert a.min() >= 0 and a.max() < fleet.M
+    # Warm-started replans must not lose to the cold plans they seed from.
+    for w, c in zip(plans[:2], cold[:2]):
+        assert w.R <= c.R * (1 + 1e-6)
+
+
+def test_planner_lru_eviction_order(scn16):
+    """LRU evicts the LEAST recently USED entry, not the oldest insert."""
+    pl = FleetPlanner(lam=LAM, cfg=CFG, cache_size=2, max_rounds=6,
+                      escape_iters=1)
+    a0 = np.zeros(16, np.int32)
+    a1 = np.ones(16, np.int32)
+    a2 = np.full(16, 2, np.int32)
+    pl.allocate(scn16, a0)          # cache: [a0]
+    pl.allocate(scn16, a1)          # cache: [a0, a1]
+    assert pl.allocate(scn16, a0).cached      # touch a0 -> [a1, a0]
+    pl.allocate(scn16, a2)          # evicts a1 -> [a0, a2]
+    assert pl.allocate(scn16, a0).cached      # a0 survived the eviction
+    assert not pl.allocate(scn16, a1).cached  # a1 did not
+    assert pl.stats["size"] == 2
+
+
+def test_plan_and_allocate_keys_are_separate(scn16):
+    """A full plan and a fixed-assignment allocation of the SAME scenario
+    never collide in the cache (allocate keys include the assignment)."""
+    pl = FleetPlanner(lam=LAM, cfg=CFG, max_rounds=6, escape_iters=1)
+    plan = pl.plan(scn16)
+    alloc = pl.allocate(scn16, plan.assign)
+    assert not plan.cached and not alloc.cached
+    assert pl.stats["hits"] == 0 and pl.stats["misses"] == 2
+    # Each path hits its own entry on repeat.
+    assert pl.plan(scn16).cached
+    assert pl.allocate(scn16, plan.assign).cached
