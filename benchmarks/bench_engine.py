@@ -123,6 +123,165 @@ def run(quiet: bool = False):
     if not quiet:
         assert R_fleet <= R_host_fleet * (1 + 1e-4), (R_fleet, R_host_fleet)
         assert host_calls_fleet / C_CELLS >= 5.0 * (1.0 / C_CELLS)
+
+    # --- bucket-by-difficulty fleet scheduling (EXPERIMENTS §Perf b) ------
+    outb = fengine.solve_fleet_assignments_bucketed(
+        fleet, lam=LAM, cfg=CFG, max_rounds=fl_rounds,
+        escape_iters=fl_escapes, n_buckets=2)
+    jax.block_until_ready(outb.R)                      # warm the jit
+    t0 = time.perf_counter()
+    outb = fengine.solve_fleet_assignments_bucketed(
+        fleet, lam=LAM, cfg=CFG, max_rounds=fl_rounds,
+        escape_iters=fl_escapes, n_buckets=2)
+    outb = jax.tree.map(np.asarray, outb)
+    us_bucket = (time.perf_counter() - t0) * 1e6
+    rows.append(row(f"engine/fleet_bucketed_C{C_CELLS}", us_bucket,
+                    f"sum_R={float(np.sum(outb.R)):.1f};n_buckets=2;"
+                    f"max_rounds_b0={int(np.max(outb.rounds)):d};"
+                    f"per_cell_us={us_bucket / C_CELLS:.0f}"))
+    if not quiet:
+        np.testing.assert_allclose(outb.R, out.R, rtol=1e-5)
+
+    rows += run_scaling(quiet=quiet)
+    return rows
+
+
+# --------------------------------------------------------------------------
+# Sub-quadratic candidate search: pruned vs full N-scaling (DESIGN.md D9)
+# --------------------------------------------------------------------------
+SCALE_NS = (16, 32, 64)     # full-neighbourhood reference points
+N_BIG = 2048                # pruned-only: full path would score 30721
+M_BIG = 16                  # candidates x an O(N) solve PER ROUND here
+TOP_K = 16
+SC_ROUNDS, SC_ESCAPES = 8, 1
+# The sweep's own trimmed solver budget: the full-vs-pruned ORDERING is
+# what the sweep measures, and it is stable under fewer bisection steps,
+# while the N=2048 point drops from ~40 min to a few on 2-vCPU CI.
+SC_CFG = sroa.SroaConfig(b_iters=24, f_iters=16, p_iters=12, t_iters=20)
+
+
+def _user_prefix(scn, n: int):
+    """First n users of a scenario (same edges, same budget)."""
+    cut = {f: getattr(scn, f)[:n] for f in fbatch._PER_USER_FIELDS}
+    return scn._replace(**cut)
+
+
+def run_scaling(quiet: bool = False):
+    """FLOPs-vs-N scaling of the pruned candidate search (ISSUE 7).
+
+    The full-neighbourhood engine runs at N <= 64 only (its per-round
+    cost is ~N^2*M).  Its objective at N=2048 is extrapolated via the
+    IMPROVEMENT it wins over the scored nearest-edge init: the raw
+    objective's growth in N is dominated by bandwidth contention (the
+    equal-split SNR collapses as B/N shrinks), which no assignment
+    search controls, so a power law fitted to small-N objectives
+    under-predicts large N for every optimizer.  What search does
+    control — the relative improvement d(N) = 1 - R_full/R_init — is
+    the quantity whose small-N power-law trend transfers: the ceiling
+    is R_init(2048) * (1 - d_extrap).  The pruned+multi-start engine
+    must land at or under that ceiling while its candidate-scoring
+    FLOPs grow ~linearly in N (the full path's grow quadratically).
+    """
+    rows = []
+    spec = dataclasses.replace(wireless.ScenarioSpec(), N=N_BIG, M=M_BIG)
+    big = wireless.draw_scenario(1, spec)
+
+    R_init, R_full = [], []
+    for n in SCALE_NS:
+        sub = _user_prefix(big, n)
+        r_i = fengine.solve_assignment(sub, lam=LAM, cfg=SC_CFG,
+                                       max_rounds=0)
+        R_init.append(float(r_i.R))
+        r_f = fengine.solve_assignment(sub, lam=LAM, cfg=SC_CFG,
+                                       max_rounds=SC_ROUNDS,
+                                       escape_iters=SC_ESCAPES)
+        jax.block_until_ready(r_f.R)
+        t0 = time.perf_counter()
+        r_f = fengine.solve_assignment(sub, lam=LAM, cfg=SC_CFG,
+                                       max_rounds=SC_ROUNDS,
+                                       escape_iters=SC_ESCAPES)
+        jax.block_until_ready(r_f.R)
+        us_f = (time.perf_counter() - t0) * 1e6
+        fl = fengine.candidate_search_flops(n, M_BIG, int(r_f.rounds),
+                                            SC_CFG)
+        rows.append(row(
+            f"engine/full_N{n}", us_f,
+            f"R={float(r_f.R):.1f};R_init={R_init[-1]:.1f};"
+            f"rounds={int(r_f.rounds)};"
+            f"cands_per_round={fl['cands_per_round']};"
+            f"score_flops={fl['score_flops']:.4g}"))
+        R_full.append(float(r_f.R))
+
+        r_p = fengine.solve_assignment(sub, lam=LAM, cfg=SC_CFG,
+                                       max_rounds=SC_ROUNDS,
+                                       escape_iters=SC_ESCAPES,
+                                       top_k=TOP_K)
+        jax.block_until_ready(r_p.R)
+        t0 = time.perf_counter()
+        r_p = fengine.solve_assignment(sub, lam=LAM, cfg=SC_CFG,
+                                       max_rounds=SC_ROUNDS,
+                                       escape_iters=SC_ESCAPES,
+                                       top_k=TOP_K)
+        jax.block_until_ready(r_p.R)
+        us_p = (time.perf_counter() - t0) * 1e6
+        flp = fengine.candidate_search_flops(n, M_BIG, int(r_p.rounds),
+                                             SC_CFG, TOP_K)
+        rows.append(row(
+            f"engine/pruned_N{n}", us_p,
+            f"R={float(r_p.R):.1f};rounds={int(r_p.rounds)};"
+            f"cands_per_round={flp['cands_per_round']};"
+            f"score_flops={flp['score_flops']:.4g}"))
+        if not quiet:
+            # Companion to the tier-1 1% guard, at the sweep's trimmed
+            # solver budget (fewer bisection steps -> noisier ranking).
+            assert float(r_p.R) <= R_full[-1] * 1.05, (r_p.R, R_full[-1])
+
+    # Power-law extrapolation of the full path's IMPROVEMENT to N_BIG,
+    # clipped to the observed range (an extrapolated d outside what any
+    # small-N search achieved is fit noise, not signal).
+    d = 1.0 - np.array(R_full) / np.array(R_init)
+    d = np.maximum(d, 1e-4)
+    slope, icept = np.polyfit(np.log(np.array(SCALE_NS, float)),
+                              np.log(d), 1)
+    d_big = float(np.clip(np.exp(icept + slope * np.log(N_BIG)),
+                          0.0, d.max()))
+
+    r_i_big = fengine.solve_assignment(big, lam=LAM, cfg=SC_CFG,
+                                       max_rounds=0)
+    R_init_big = float(r_i_big.R)
+    R_extrap = R_init_big * (1.0 - d_big)
+    rows.append(row(
+        f"engine/init_N{N_BIG}", 0.0,
+        f"R={R_init_big:.1f};d_extrap={d_big:.4f};"
+        f"R_full_extrap={R_extrap:.1f}"))
+
+    # One cold call (compile included): at this size the analytic FLOPs
+    # columns carry the scaling claim, not the wall clock.
+    t0 = time.perf_counter()
+    r_big = fengine.solve_assignment(big, lam=LAM, cfg=SC_CFG,
+                                     max_rounds=SC_ROUNDS,
+                                     escape_iters=SC_ESCAPES,
+                                     top_k=TOP_K, n_starts=2)
+    jax.block_until_ready(r_big.R)
+    us_big = (time.perf_counter() - t0) * 1e6
+    rounds_big = int(r_big.rounds)
+    flb = fengine.candidate_search_flops(N_BIG, M_BIG, rounds_big, SC_CFG,
+                                         TOP_K)
+    flb_full = fengine.candidate_search_flops(N_BIG, M_BIG, rounds_big,
+                                              SC_CFG)
+    rows.append(row(
+        f"engine/pruned_N{N_BIG}", us_big,
+        f"R={float(r_big.R):.1f};R_full_extrap={R_extrap:.1f};"
+        f"rounds={rounds_big};n_starts=2;"
+        f"cands_per_round={flb['cands_per_round']};"
+        f"score_flops={flb['score_flops']:.4g};"
+        f"full_score_flops={flb_full['score_flops']:.4g};"
+        f"flops_ratio={flb_full['score_flops'] / flb['score_flops']:.0f}"))
+    if not quiet:
+        assert float(r_big.R) <= R_extrap, (float(r_big.R), R_extrap)
+        # Candidate-scoring FLOPs: ~linear in N pruned vs ~quadratic full.
+        assert flb["cands_per_round"] == 1 + TOP_K
+        assert flb_full["score_flops"] > 100 * flb["score_flops"]
     return rows
 
 

@@ -33,9 +33,29 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
 
 
 def _parse_row(suite: str, line: str) -> dict:
+    """CSV row -> JSON record; `derived` k=v pairs become typed fields.
+
+    Suites encode structured metrics as ``k=v`` pairs separated by ``;``
+    (e.g. ``R=123.4;rounds=7;score_flops=2.1e9``), so the ``--json``
+    payload exposes candidate-scoring FLOPs, trip counts etc. as real
+    columns instead of an opaque string.  Non-numeric values stay strings;
+    rows without pairs just omit ``fields``.
+    """
     name, us, derived = line.split(",", 2)
-    return {"suite": suite, "name": name, "us_per_call": float(us),
-            "derived": derived}
+    rec = {"suite": suite, "name": name, "us_per_call": float(us),
+           "derived": derived}
+    fields = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            fields[k.strip()] = float(v)
+        except ValueError:
+            fields[k.strip()] = v
+    if fields:
+        rec["fields"] = fields
+    return rec
 
 
 def _run_metadata() -> dict:

@@ -51,6 +51,7 @@ class SroaConfig:
     auto_bounds: bool = True  # derive [t_low, t_up] from the scenario
     refine_iters: int = 0    # >0: beyond-paper golden-section polish of t*
     use_pallas: bool = False  # route invert_rate through the Pallas kernel
+    fused: bool = False      # run Algs 2-4 in ONE Pallas kernel (see D9)
 
 
 class SroaResult(NamedTuple):
@@ -157,6 +158,59 @@ def _pallas_invert(iters: int):
         return out, True
 
     return inv
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_solver(cfg: "SroaConfig"):
+    """Whole-SROA Pallas solver with a vmap rule that keeps flattening.
+
+    Like :func:`_pallas_invert_nd` but for the ENTIRE Algorithm 2-4 nest:
+    every extra vmap level (the engine's candidate axis, the fleet's cell
+    axis) broadcasts unbatched operands and recurses one rank higher, so
+    arbitrarily nested batching still lowers to one kernel launch over the
+    flattened problem axis.
+    """
+    from jax.custom_batching import custom_vmap
+
+    from repro.kernels import ops as kops
+
+    kw = dict(b_iters=cfg.b_iters, f_iters=cfg.f_iters,
+              p_iters=cfg.p_iters, t_iters=cfg.t_iters, eps0=cfg.eps0,
+              eps1=cfg.eps1, eps2=cfg.eps2, t_low=cfg.t_low, t_up=cfg.t_up)
+
+    @custom_vmap
+    def solve_nd(A, J, H, delta, h, f_max, p_max, B, b_max, N0, lam, ect):
+        return kops.sroa_solve_batched(A, J, H, delta, h, f_max, p_max,
+                                       B, b_max, N0, lam, ect, **kw)
+
+    @solve_nd.def_vmap
+    def _rule(axis_size, in_batched, *args):  # noqa: ANN001
+        args = tuple(
+            a if ab else jnp.broadcast_to(a, (axis_size,) + jnp.shape(a))
+            for a, ab in zip(args, in_batched))
+        out = solve_nd(*args)
+        return out, tuple(True for _ in out)
+
+    return solve_nd
+
+
+def _solve_constants_fused(consts: SroaConstants, B, b_max, f_max, p_max,
+                           N0, lam, cfg: "SroaConfig") -> "SroaResult":
+    """Fused-kernel equivalent of :func:`solve_constants_impl`.
+
+    Agrees with the jnp path to bisection tolerance (not bitwise — the
+    kernel carries best-so-far state per problem rather than per tree
+    node); the parity contract is tested in ``tests/test_kernels.py``.
+    """
+    shape = jnp.shape(consts.h)
+    f_max = jnp.broadcast_to(jnp.asarray(f_max, jnp.float32), shape)
+    p_max = jnp.broadcast_to(jnp.asarray(p_max, jnp.float32), shape)
+    b, f, p, t, R, b_sum, feas = _fused_solver(cfg)(
+        consts.A, consts.J, consts.H, consts.delta, consts.h, f_max, p_max,
+        jnp.asarray(B, jnp.float32), jnp.asarray(b_max, jnp.float32),
+        jnp.asarray(N0, jnp.float32), jnp.asarray(lam, jnp.float32),
+        jnp.asarray(consts.E_cloud_total, jnp.float32))
+    return SroaResult(b=b, f=f, p=p, t=t, R=R, b_sum=b_sum, feasible=feas)
 
 
 def _invert_rate_dispatch(G, target, b_max, iters, use_pallas: bool):
@@ -275,7 +329,11 @@ def _auto_bounds(consts: SroaConstants, B, f_max, p_max, N0, lam,
     def body(_, lohi):
         lo, hi = lohi
         mid = 0.5 * (lo + hi)
-        ok = jnp.sum(b_of_t(mid)) <= B
+        # Strict: an infeasible deadline pegs a user at b = b_max = B, so a
+        # single-user cell sums to EXACTLY B and `<=` would call every t
+        # feasible, collapsing t_min to t_low.  A genuinely feasible
+        # minimal allocation never lands on B to the last ulp.
+        ok = jnp.sum(b_of_t(mid)) < B
         return jnp.where(ok, lo, mid), jnp.where(ok, mid, hi)
 
     lo = jnp.asarray(cfg.t_low, jnp.float32)
@@ -304,7 +362,16 @@ def solve_constants_impl(consts: SroaConstants, B, b_max, f_max, p_max, N0,
     its own jitted while_loop (and the fleet path vmaps that again over
     cells), so the jit wrapper lives one level up in
     :func:`solve_constants`.
+
+    With ``cfg.fused`` the whole Algorithm 2-4 nest is delegated to the
+    fused Pallas kernel (one launch per flattened batch; see D9).  The
+    fused path implements the paper-faithful algorithm only, so the
+    beyond-paper ``refine_iters`` polish and manual bounds fall back to
+    the jnp path.
     """
+    if cfg.fused and cfg.auto_bounds and cfg.refine_iters == 0:
+        return _solve_constants_fused(consts, B, b_max, f_max, p_max, N0,
+                                      lam, cfg)
 
     def eval_t(t):
         b, f, p, b_sum = algorithm3(consts, t, B, b_max, f_max, p_max, N0, cfg)

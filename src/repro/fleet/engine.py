@@ -24,6 +24,7 @@ host-side ``BatchedTsiaHistory`` from them.  See DESIGN.md D7.
 """
 from __future__ import annotations
 
+import functools
 from functools import partial
 from typing import NamedTuple
 
@@ -108,6 +109,57 @@ def escape_move(assign: jnp.ndarray, R_m: jnp.ndarray, b: jnp.ndarray,
     return user, m_plus, m_minus, ok
 
 
+@functools.lru_cache(maxsize=None)
+def _topk_moves_nd(k: int):
+    """Top-k pruning with a vmap rule that keeps flattening under vmap.
+
+    Same recursion trick as ``sroa._pallas_invert_nd``: the fleet's cell
+    axis (and any axis above it) broadcasts unbatched operands and
+    re-enters the same custom-vmap function one rank higher, so the whole
+    stacked fleet's move scoring is ONE kernel launch per round.
+    """
+    from jax.custom_batching import custom_vmap
+
+    from repro.kernels import ops as kops
+
+    @custom_vmap
+    def topk_nd(gain, H, p_max, assign, mask, N0, B):
+        return kops.topk_move_scores(gain, H, p_max, assign, mask, N0, B,
+                                     k=k)
+
+    @topk_nd.def_vmap
+    def _rule(axis_size, in_batched, *args):  # noqa: ANN001
+        args = tuple(
+            a if ab else jnp.broadcast_to(a, (axis_size,) + jnp.shape(a))
+            for a, ab in zip(args, in_batched))
+        out = topk_nd(*args)
+        return out, tuple(True for _ in out)
+
+    return topk_nd
+
+
+def _pruned_candidates(scn: Scenario, current: jnp.ndarray,
+                       mask: jnp.ndarray, top_k: int):
+    """The k+1 candidate patterns the move-score kernel nominates.
+
+    Row 0 is the current pattern (so argmin ties, best-ever tracking and
+    the escape's R_m[0]/b[0] reads keep their full-path meaning); rows
+    1..k apply the k cheapest moves by the kernel's marginal-cost
+    estimate.  Padding rows (score >= _BIG/2: fewer than k valid moves
+    existed) are flagged invalid, mirroring ``candidate_assigns_device``.
+    """
+    H = jnp.broadcast_to(jnp.asarray(scn.s_bits, jnp.float32),
+                         current.shape)
+    user, dst, score = _topk_moves_nd(top_k)(
+        scn.gain, H, scn.p_max, current, mask,
+        jnp.asarray(scn.N0, jnp.float32),
+        jnp.asarray(scn.B_total, jnp.float32))
+    rows = jax.vmap(lambda u, d: current.at[u].set(d))(user, dst)
+    cands = jnp.concatenate([current[None, :], rows], axis=0)
+    valid = jnp.concatenate([jnp.ones((1,), bool), score < _BIG / 2])
+    return cands, valid
+
+
 def _score_neighbourhood(scn: Scenario, cands: jnp.ndarray,
                          mask: jnp.ndarray, lam, cfg: sroa.SroaConfig):
     """Batched SROA + cost model over the candidate axis (one computation)."""
@@ -125,9 +177,17 @@ def _score_neighbourhood(scn: Scenario, cands: jnp.ndarray,
 
 def engine_core(scn: Scenario, init_assign: jnp.ndarray, mask: jnp.ndarray,
                 lam, cfg: sroa.SroaConfig, max_rounds: int,
-                escape_iters: int) -> EngineResult:
+                escape_iters: int, top_k: int = 0) -> EngineResult:
     """The traceable search loop (vmap this for fleets; jit it via
-    :func:`solve_assignment`)."""
+    :func:`solve_assignment`).
+
+    ``top_k > 0`` switches candidate enumeration from the full
+    ``1 + N*(M-1)`` neighbourhood to the k moves nominated by the Pallas
+    move-score kernel (D9): each round then runs k+1 full SROA solves
+    instead of O(N*M), making the round's scoring cost independent of the
+    neighbourhood size.  Descent, escape, best-ever tracking and Remark-1
+    convergence are unchanged — only which moves get scored.
+    """
     N, M = scn.N, scn.M
     T = int(max_rounds)
     lam = jnp.asarray(lam, jnp.float32)
@@ -135,7 +195,10 @@ def engine_core(scn: Scenario, init_assign: jnp.ndarray, mask: jnp.ndarray,
     mask = jnp.asarray(mask, bool)
 
     def body(st: _EngineState) -> _EngineState:
-        cands, valid = candidate_assigns_device(st.current, M, mask)
+        if top_k > 0:
+            cands, valid = _pruned_candidates(scn, st.current, mask, top_k)
+        else:
+            cands, valid = candidate_assigns_device(st.current, M, mask)
         res, ev = _score_neighbourhood(scn, cands, mask, lam, cfg)
         Rv = jnp.where(valid, ev.R, _BIG)
         j = jnp.argmin(Rv)                 # first minimum; index 0 on ties
@@ -218,12 +281,63 @@ def engine_core(scn: Scenario, init_assign: jnp.ndarray, mask: jnp.ndarray,
                         converged=st.converged, trace=st.trace)
 
 
-@partial(jax.jit, static_argnames=("cfg", "max_rounds", "escape_iters"))
+def _start_patterns(scn: Scenario, init: jnp.ndarray, mask: jnp.ndarray,
+                    n_starts: int) -> jnp.ndarray:
+    """(S, N) initial patterns for multi-start search (D9).
+
+    Start 0 is the caller's pattern (so best-of-starts can never be worse
+    than the single-start search), start 1 the best-gain greedy pattern,
+    and further starts deterministic pseudo-random draws (fixed key — the
+    engine stays a pure function of its arguments).  Masked users keep
+    their init value in every start; the engine never moves them.
+    """
+    inits = [init]
+    if n_starts > 1:
+        greedy = jnp.argmax(scn.gain, axis=1).astype(jnp.int32)
+        inits.append(jnp.where(mask, greedy, init))
+    for s in range(2, n_starts):
+        key = jax.random.fold_in(jax.random.PRNGKey(17), s)
+        rnd = jax.random.randint(key, init.shape, 0, scn.M, jnp.int32)
+        inits.append(jnp.where(mask, rnd, init))
+    return jnp.stack(inits, axis=0)
+
+
+def search_core(scn: Scenario, init_assign: jnp.ndarray, mask: jnp.ndarray,
+                lam, cfg: sroa.SroaConfig, max_rounds: int,
+                escape_iters: int, top_k: int = 0,
+                n_starts: int = 1) -> EngineResult:
+    """Multi-start wrapper around :func:`engine_core` (still traceable).
+
+    ``n_starts > 1`` vmaps the whole search loop over distinct initial
+    patterns — one extra batch axis on the existing loop state, so the S
+    restarts run as one batched computation — and returns the restart
+    whose final evaluate-R is best.  Because start 0 is the caller's init,
+    the result is never worse than the single-start search with the same
+    knobs (the property the tier-1 guard tests assert).
+    """
+    if n_starts <= 1:
+        return engine_core(scn, init_assign, mask, lam, cfg, max_rounds,
+                           escape_iters, top_k)
+    init = jnp.asarray(init_assign, jnp.int32)
+    inits = _start_patterns(scn, init, jnp.asarray(mask, bool), n_starts)
+
+    def one(ia):
+        return engine_core(scn, ia, mask, lam, cfg, max_rounds,
+                           escape_iters, top_k)
+
+    res = jax.vmap(one)(inits)
+    i = jnp.argmin(res.R)
+    return jax.tree.map(lambda x: x[i], res)
+
+
+@partial(jax.jit, static_argnames=("cfg", "max_rounds", "escape_iters",
+                                   "top_k", "n_starts"))
 def solve_assignment(scn: Scenario, init_assign: jnp.ndarray | None = None,
                      mask: jnp.ndarray | None = None, lam=1.0,
                      cfg: sroa.SroaConfig = sroa.SroaConfig(),
                      max_rounds: int = 48,
-                     escape_iters: int = 6) -> EngineResult:
+                     escape_iters: int = 6, top_k: int = 0,
+                     n_starts: int = 1) -> EngineResult:
     """One cell's ENTIRE assignment search as one jitted call.
 
     Args:
@@ -236,37 +350,148 @@ def solve_assignment(scn: Scenario, init_assign: jnp.ndarray | None = None,
       cfg:          SROA config shared by every candidate solve.
       max_rounds:   assigning-iteration cap (sizes the trace buffers).
       escape_iters: non-improving Definition-1/2 escapes allowed.
+      top_k:        0 = score the full 1 + N*(M-1) neighbourhood per
+                    round; > 0 = score only the k kernel-nominated moves
+                    (sub-quadratic rounds, see D9).
+      n_starts:     parallel restarts from distinct initial patterns;
+                    best final objective wins (never worse than 1).
     """
     if mask is None:
         mask = jnp.ones((scn.N,), bool)
     if init_assign is None:
         init_assign = nearest_edge_assignment(scn)
-    return engine_core(scn, init_assign, mask, lam, cfg, max_rounds,
-                       escape_iters)
+    return search_core(scn, init_assign, mask, lam, cfg, max_rounds,
+                       escape_iters, top_k, n_starts)
 
 
-@partial(jax.jit, static_argnames=("cfg", "max_rounds", "escape_iters"))
+@partial(jax.jit, static_argnames=("cfg", "max_rounds", "escape_iters",
+                                   "top_k", "n_starts"))
 def solve_fleet_assignments(fleet: FleetScenario,
                             init_assigns: jnp.ndarray | None = None,
                             lam=1.0,
                             cfg: sroa.SroaConfig = sroa.SroaConfig(),
                             max_rounds: int = 48,
-                            escape_iters: int = 6) -> EngineResult:
+                            escape_iters: int = 6, top_k: int = 0,
+                            n_starts: int = 1) -> EngineResult:
     """Full assignment searches for EVERY cell of a fleet in one call.
 
-    ``jax.vmap`` of :func:`engine_core` over the stacked cells: every leaf
+    ``jax.vmap`` of :func:`search_core` over the stacked cells: every leaf
     of the returned :class:`EngineResult` carries a leading (C,) axis.
     ``lam`` may be scalar or (C,).  Cells that converge early idle inside
     the batched while_loop (their element-wise state is frozen) until the
-    slowest cell finishes — still zero host round trips overall.
+    slowest cell finishes — still zero host round trips overall (see
+    :func:`solve_fleet_assignments_bucketed` for the scheduling fix).
     """
     if init_assigns is None:
         init_assigns = fleet_assignments(fleet)
     lam_v = jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (fleet.C,))
 
     def one(cell, init, mask, l):
-        return engine_core(cell, init, mask, l, cfg, max_rounds,
-                           escape_iters)
+        return search_core(cell, init, mask, l, cfg, max_rounds,
+                           escape_iters, top_k, n_starts)
 
     return jax.vmap(one)(fleet.cells, jnp.asarray(init_assigns, jnp.int32),
                          fleet.mask, lam_v)
+
+
+def difficulty_proxy(fleet: FleetScenario) -> jnp.ndarray:
+    """(C,) convergence-difficulty proxy for bucket scheduling.
+
+    Active-user count dominates how many assigning rounds a cell needs
+    (bigger neighbourhood, longer descents); the normalized gain spread
+    breaks ties — flat channels converge fast, heterogeneous ones wander.
+    Cheap (no solves), monotone-ish in observed trip counts; exactness is
+    not required, only a useful sort order.
+    """
+    m = fleet.mask.astype(jnp.float32)
+    n_act = jnp.sum(m, axis=1)
+    g = jnp.log(jnp.maximum(fleet.cells.gain, 1e-30))
+    g_best = jnp.max(g, axis=2)
+    spread = jnp.std(jnp.where(fleet.mask, g_best, 0.0), axis=1)
+    return n_act + spread / jnp.maximum(jnp.max(spread), 1e-9)
+
+
+def solve_fleet_assignments_bucketed(
+        fleet: FleetScenario, init_assigns: jnp.ndarray | None = None,
+        lam=1.0, cfg: sroa.SroaConfig = sroa.SroaConfig(),
+        max_rounds: int = 48, escape_iters: int = 6, top_k: int = 0,
+        n_starts: int = 1, n_buckets: int = 2) -> EngineResult:
+    """Bucket-by-difficulty fleet scheduling (EXPERIMENTS.md §Perf item b).
+
+    The batched engine while_loop runs every cell for the worst
+    trip count of its batch: one stubborn cell drags all converged ones
+    through full-cost rounds (their state is frozen, the FLOPs are not).
+    Here cells are sorted by :func:`difficulty_proxy` and solved in
+    ``n_buckets`` equal-size batched calls, so easy buckets exit at their
+    own worst case instead of the fleet's.  Equal bucket sizes keep the
+    compile count at one program per fleet-size/bucket-count pair.
+
+    Host-side orchestration (n_buckets jitted calls instead of 1);
+    results are re-scattered to the caller's cell order, so the returned
+    :class:`EngineResult` is leaf-for-leaf comparable with
+    :func:`solve_fleet_assignments` — same searches, same answers.
+    """
+    C = fleet.C
+    if n_buckets <= 1 or C < 2 * n_buckets:
+        return solve_fleet_assignments(fleet, init_assigns, lam, cfg,
+                                       max_rounds, escape_iters, top_k,
+                                       n_starts)
+    if init_assigns is None:
+        init_assigns = fleet_assignments(fleet)
+    init_assigns = jnp.asarray(init_assigns, jnp.int32)
+    lam_v = jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (C,))
+    order = jnp.argsort(difficulty_proxy(fleet))
+
+    # Equal-size buckets (remainder rides with the hardest bucket) so the
+    # per-bucket program is compiled once per (C, n_buckets).
+    size = C // n_buckets
+    parts = []
+    outs = []
+    for i in range(n_buckets):
+        lo = i * size
+        hi = lo + size if i < n_buckets - 1 else C
+        idx = order[lo:hi]
+        parts.append(idx)
+        sub = jax.tree.map(lambda x, ix=idx: x[ix], fleet)
+        outs.append(solve_fleet_assignments(
+            sub, init_assigns[idx], lam_v[idx], cfg, max_rounds,
+            escape_iters, top_k, n_starts))
+    perm = jnp.concatenate(parts)
+    inv = jnp.argsort(perm)
+    stacked = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *outs)
+    return jax.tree.map(lambda x: x[inv], stacked)
+
+
+def sroa_solve_flops(N: int, cfg: sroa.SroaConfig) -> int:
+    """Analytic FLOP model of ONE constants-space SROA solve (worst-case
+    trip counts; the accounting benchmarks/run.py --json reports).
+
+    The nest is t_iters x (p_iters x (f_iters x (b_iters x N))): every
+    bandwidth-inversion step costs ~8 flops/user, each f step adds the
+    budget reduction, and `_auto_bounds` prepends t_iters more inversions.
+    """
+    inv = 8 * cfg.b_iters * N
+    alg2 = cfg.f_iters * (inv + 12 * N)
+    alg3 = cfg.p_iters * (alg2 + 8 * N)
+    bounds = cfg.t_iters * (inv + 10 * N)
+    return bounds + cfg.t_iters * (alg3 + 20 * N)
+
+
+def candidate_search_flops(N: int, M: int, rounds: int,
+                           cfg: sroa.SroaConfig, top_k: int = 0) -> dict:
+    """Candidate-scoring cost of one engine search (analytic, see D9).
+
+    Returns a dict with the per-round candidate count and total FLOPs:
+    full path scores 1 + N*(M-1) candidates per round (quadratic in N
+    once each solve's O(N) cost is included); the pruned path scores
+    k + 1 plus the O(N*M) move-score kernel — linear in N.
+    """
+    solve = sroa_solve_flops(N, cfg)
+    if top_k > 0:
+        cands = 1 + top_k
+        proxy = (12 + top_k) * N * M        # score + k knockout reductions
+    else:
+        cands = 1 + N * (M - 1)
+        proxy = 0
+    return {"cands_per_round": cands,
+            "score_flops": rounds * (cands * solve + proxy)}

@@ -79,7 +79,7 @@ def _first_move(base: np.ndarray, cand: np.ndarray) -> tuple[int, int, int]:
 
 
 def _history_from_trace(res: fengine.EngineResult, n_movable: int,
-                        M: int) -> BatchedTsiaHistory:
+                        M: int, top_k: int = 0) -> BatchedTsiaHistory:
     """Rebuild the host-side history from the engine's device trace."""
     rounds = int(res.rounds)
     valid = np.asarray(res.trace.rounds_valid)
@@ -87,11 +87,12 @@ def _history_from_trace(res: fengine.EngineResult, n_movable: int,
     mv = np.asarray(res.trace.moves)
     hist = BatchedTsiaHistory(R_trace=[], moves=[], rounds=rounds,
                               solve_calls=1)
-    # Every executed round scored the full fixed-size neighbourhood; only
-    # the valid rows (current pattern + movable users' moves) count.  With
-    # no rounds (max_rounds=0) the engine still scores the init pattern.
-    hist.candidates_evaluated = (rounds * (1 + n_movable * (M - 1))
-                                 if rounds else 1)
+    # Every executed round scored the fixed-size candidate set: the full
+    # neighbourhood (current pattern + movable users' moves), or only the
+    # k kernel-nominated moves on the pruned path.  With no rounds
+    # (max_rounds=0) the engine still scores the init pattern.
+    per_round = (1 + top_k) if top_k else (1 + n_movable * (M - 1))
+    hist.candidates_evaluated = rounds * per_round if rounds else 1
     kind_name = {fengine.KIND_DESCENT: "descent",
                  fengine.KIND_ESCAPE: "escape"}
     for r in np.flatnonzero(valid):
@@ -107,12 +108,15 @@ def solve(scn: Scenario, lam=1.0,
           cfg: sroa.SroaConfig = sroa.SroaConfig(),
           init_assign: np.ndarray | None = None,
           max_rounds: int = 64, escape_iters: int = 8,
-          mask: np.ndarray | None = None) -> BatchedTsiaResult:
+          mask: np.ndarray | None = None, top_k: int = 0,
+          n_starts: int = 1) -> BatchedTsiaResult:
     """Device-resident batched TSIA: ONE jitted call for the whole search.
 
     ``mask`` marks active users (inactive slots are never moved and carry
     zero cost); it is how churned scenarios from
     :mod:`repro.fleet.dynamics` are planned without reshaping.
+    ``top_k``/``n_starts`` are the engine's sub-quadratic search knobs
+    (move pruning + parallel restarts; DESIGN.md D9).
     """
     jmask = (jnp.ones((scn.N,), bool) if mask is None
              else jnp.asarray(mask, bool))
@@ -120,9 +124,10 @@ def solve(scn: Scenario, lam=1.0,
             else jnp.asarray(np.asarray(init_assign), jnp.int32))
     res = fengine.solve_assignment(scn, init, jmask, lam, cfg=cfg,
                                    max_rounds=max_rounds,
-                                   escape_iters=escape_iters)
+                                   escape_iters=escape_iters,
+                                   top_k=top_k, n_starts=n_starts)
     n_movable = int(np.asarray(jmask).sum())
-    hist = _history_from_trace(res, n_movable, scn.M)
+    hist = _history_from_trace(res, n_movable, scn.M, top_k)
     return BatchedTsiaResult(assign=np.asarray(res.assign),
                              sroa=jax.tree.map(np.asarray, res.sroa),
                              R=float(res.R), history=hist)
@@ -221,7 +226,8 @@ def replan(scn: Scenario, prev_assign: np.ndarray, lam=1.0,
            new_users: np.ndarray | None = None,
            mask: np.ndarray | None = None,
            max_rounds: int = 16, escape_iters: int = 2,
-           use_engine: bool = True) -> BatchedTsiaResult:
+           use_engine: bool = True, top_k: int = 0,
+           n_starts: int = 1) -> BatchedTsiaResult:
     """Warm-start re-planning after a dynamics event.
 
     Keeps the previous assignment for surviving users (their optimum moves
@@ -234,6 +240,10 @@ def replan(scn: Scenario, prev_assign: np.ndarray, lam=1.0,
     if new_users is not None and len(new_users):
         ne = np.asarray(nearest_edge_assignment(scn))
         init[np.asarray(new_users, int)] = ne[np.asarray(new_users, int)]
-    solver = solve if use_engine else solve_host
-    return solver(scn, lam, cfg, init_assign=init, max_rounds=max_rounds,
-                  escape_iters=escape_iters, mask=mask)
+    if use_engine:
+        return solve(scn, lam, cfg, init_assign=init, max_rounds=max_rounds,
+                     escape_iters=escape_iters, mask=mask, top_k=top_k,
+                     n_starts=n_starts)
+    return solve_host(scn, lam, cfg, init_assign=init,
+                      max_rounds=max_rounds, escape_iters=escape_iters,
+                      mask=mask)

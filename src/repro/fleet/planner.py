@@ -68,18 +68,29 @@ class FleetPlanner:
                     (one jitted call per plan, :mod:`repro.fleet.engine`);
                     False falls back to the host-driven loop
                     (:func:`repro.fleet.incremental.solve_host`).
+      top_k:        engine move pruning — 0 scores the full neighbourhood,
+                    > 0 scores only the k kernel-nominated moves per
+                    round (DESIGN.md D9; requires ``use_engine``).
+      n_starts:     engine multi-start restarts per cold plan (D9).
+      n_buckets:    > 1 schedules batched fleet plans in difficulty-sorted
+                    buckets (:func:`repro.fleet.engine
+                    .solve_fleet_assignments_bucketed`).
     """
 
     def __init__(self, lam: float = 1.0,
                  cfg: sroa.SroaConfig = sroa.SroaConfig(),
                  cache_size: int = 256, max_rounds: int = 48,
-                 escape_iters: int = 6, use_engine: bool = True):
+                 escape_iters: int = 6, use_engine: bool = True,
+                 top_k: int = 0, n_starts: int = 1, n_buckets: int = 1):
         self.lam = float(lam)
         self.cfg = cfg
         self.cache_size = cache_size
         self.max_rounds = max_rounds
         self.escape_iters = escape_iters
         self.use_engine = use_engine
+        self.top_k = int(top_k)
+        self.n_starts = int(n_starts)
+        self.n_buckets = int(n_buckets)
         self._cache: OrderedDict[str, PlanResult] = OrderedDict()
         self.hits = 0
         self.misses = 0
@@ -123,14 +134,20 @@ class FleetPlanner:
                                      new_users=new_users, mask=mask,
                                      max_rounds=self.max_rounds,
                                      escape_iters=self.escape_iters,
-                                     use_engine=self.use_engine)
+                                     use_engine=self.use_engine,
+                                     top_k=self.top_k,
+                                     n_starts=self.n_starts)
+        elif self.use_engine:
+            res = incremental.solve(scn, self.lam, self.cfg,
+                                    max_rounds=self.max_rounds,
+                                    escape_iters=self.escape_iters,
+                                    mask=mask, top_k=self.top_k,
+                                    n_starts=self.n_starts)
         else:
-            solver = (incremental.solve if self.use_engine
-                      else incremental.solve_host)
-            res = solver(scn, self.lam, self.cfg,
-                         max_rounds=self.max_rounds,
-                         escape_iters=self.escape_iters,
-                         mask=mask)
+            res = incremental.solve_host(scn, self.lam, self.cfg,
+                                         max_rounds=self.max_rounds,
+                                         escape_iters=self.escape_iters,
+                                         mask=mask)
         plan = PlanResult(
             assign=np.asarray(res.assign), b=np.asarray(res.sroa.b),
             f=np.asarray(res.sroa.f), p=np.asarray(res.sroa.p),
@@ -205,10 +222,16 @@ class FleetPlanner:
             sub = (fleet if len(miss) == fleet.C
                    else jax.tree.map(lambda x: x[np.asarray(miss)], fleet))
             t0 = time.perf_counter()
-            out = fengine.solve_fleet_assignments(
+            solver = (fengine.solve_fleet_assignments_bucketed
+                      if self.n_buckets > 1
+                      else fengine.solve_fleet_assignments)
+            kw = ({"n_buckets": self.n_buckets}
+                  if self.n_buckets > 1 else {})
+            out = solver(
                 sub, lam=self.lam, cfg=self.cfg,
                 max_rounds=self.max_rounds,
-                escape_iters=self.escape_iters)
+                escape_iters=self.escape_iters, top_k=self.top_k,
+                n_starts=self.n_starts, **kw)
             out = jax.tree.map(np.asarray, out)
             ms = (time.perf_counter() - t0) * 1e3 / len(miss)
             for row, i in enumerate(miss):

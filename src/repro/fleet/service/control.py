@@ -57,6 +57,8 @@ class ServiceConfig:
     warm_start: bool = True    # seed re-searches from the cached plans
     bucket: bool = True        # pad replan sets to power-of-two buckets
     shard: bool = True         # shard the cell axis over visible devices
+    top_k: int = 0             # engine move pruning (0 = full nbhd; D9)
+    n_starts: int = 1          # engine multi-start restarts (D9)
 
 
 class TickRecord(NamedTuple):
@@ -84,7 +86,8 @@ class PlanningService:
         self.spec = spec or ScenarioSpec()
         self.planner = planner or FleetPlanner(
             lam=lam, cfg=sroa_cfg or sroa.SroaConfig(),
-            max_rounds=cfg.max_rounds, escape_iters=cfg.escape_iters)
+            max_rounds=cfg.max_rounds, escape_iters=cfg.escape_iters,
+            top_k=cfg.top_k, n_starts=cfg.n_starts)
         self.lam = self.planner.lam
         self.sroa_cfg = self.planner.cfg
         self.mesh = fshard.cell_mesh(devices) if cfg.shard else None
@@ -101,7 +104,8 @@ class PlanningService:
     def _engine(self, fleet, init_assigns):
         return fshard.solve_fleet_sharded(
             fleet, init_assigns, self.lam, self.sroa_cfg,
-            self.cfg.max_rounds, self.cfg.escape_iters, mesh=self.mesh)
+            self.cfg.max_rounds, self.cfg.escape_iters, mesh=self.mesh,
+            top_k=self.cfg.top_k, n_starts=self.cfg.n_starts)
 
     def _reprice(self) -> sroa.SroaResult:
         """Batched SROA of the current assignments under the live channel."""

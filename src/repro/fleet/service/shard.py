@@ -28,14 +28,14 @@ from repro.runtime.sharding import cell_mesh  # noqa: F401  (re-export)
 
 @lru_cache(maxsize=None)
 def _sharded_solver(mesh: Mesh, cfg: sroa.SroaConfig, max_rounds: int,
-                    escape_iters: int):
+                    escape_iters: int, top_k: int = 0, n_starts: int = 1):
     """Build (once per mesh/config) the jitted shard-mapped fleet solver."""
     axis = mesh.axis_names[0]
 
     def local(cells, init, mask, lam_v):
         def one(cell, ia, mk, lam):
-            return fengine.engine_core(cell, ia, mk, lam, cfg, max_rounds,
-                                       escape_iters)
+            return fengine.search_core(cell, ia, mk, lam, cfg, max_rounds,
+                                       escape_iters, top_k, n_starts)
         return jax.vmap(one)(cells, init, mask, lam_v)
 
     fn = shard_map(local, mesh=mesh,
@@ -60,19 +60,23 @@ def solve_fleet_sharded(fleet: fbatch.FleetScenario,
                         lam=1.0,
                         cfg: sroa.SroaConfig = sroa.SroaConfig(),
                         max_rounds: int = 48, escape_iters: int = 6,
-                        mesh: Mesh | None = None) -> fengine.EngineResult:
+                        mesh: Mesh | None = None, top_k: int = 0,
+                        n_starts: int = 1) -> fengine.EngineResult:
     """Fleet-wide assignment search, sharded over devices when available.
 
     ``mesh`` is a 1-D cell mesh (``repro.runtime.sharding.cell_mesh``);
     None runs the single-device path.  C is padded up to a multiple of the
     device count by repeating the last cell (its duplicate rows are
     dropped from the result), so any fleet size works on any mesh.
+    ``top_k``/``n_starts`` are the engine's sub-quadratic search knobs
+    (DESIGN.md D9); they shard like every other static.
     """
     if init_assigns is None:
         init_assigns = fbatch.fleet_assignments(fleet)
     if mesh is None:
         return fengine.solve_fleet_assignments(
-            fleet, init_assigns, lam, cfg, max_rounds, escape_iters)
+            fleet, init_assigns, lam, cfg, max_rounds, escape_iters,
+            top_k, n_starts)
     C = fleet.C
     ndev = int(np.prod(mesh.devices.shape))
     pad = (-C) % ndev
@@ -82,8 +86,8 @@ def solve_fleet_sharded(fleet: fbatch.FleetScenario,
     if pad:
         cells, init, mask, lam_v = (_pad_rows(t, pad) for t in
                                     (cells, init, mask, lam_v))
-    out = _sharded_solver(mesh, cfg, max_rounds, escape_iters)(
-        cells, init, mask, lam_v)
+    out = _sharded_solver(mesh, cfg, max_rounds, escape_iters, top_k,
+                          n_starts)(cells, init, mask, lam_v)
     if pad:
         out = jax.tree.map(lambda x: x[:C], out)
     return out

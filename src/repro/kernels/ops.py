@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import sroa_bisect as _sb
+from repro.kernels import topk_moves as _tk
 
 
 def _default_interpret() -> bool:
@@ -46,6 +47,82 @@ def sroa_invert_rate_batched(G, target, b_max, iters: int = 42,
                                      bm.reshape(-1), iters=iters,
                                      interpret=interpret)
     return out.reshape(shape)
+
+
+@partial(jax.jit, static_argnames=("b_iters", "f_iters", "p_iters",
+                                   "t_iters", "eps0", "eps1", "eps2",
+                                   "t_low", "t_up", "interpret"))
+def sroa_solve_batched(A, J, H, delta, h, f_max, p_max, B, b_max, N0, lam,
+                       E_cloud_total, *, b_iters: int = 42,
+                       f_iters: int = 40, p_iters: int = 36,
+                       t_iters: int = 48, eps0: float = 1e-4,
+                       eps1: float = 1e-4, eps2: float = 1e-4,
+                       t_low: float = 1.0, t_up: float = 3e7,
+                       interpret: bool | None = None):
+    """Fused full-SROA solve: every (..., N)-leading axis in one launch.
+
+    Per-user operands are (..., N); per-problem operands are (...) or
+    scalar.  All leading axes flatten into the kernel's problem axis, so
+    the engine's candidates-within-cells double vmap becomes a single
+    Pallas call instead of four nested XLA while_loops per candidate.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    A = jnp.asarray(A, jnp.float32)
+    lead, N = A.shape[:-1], A.shape[-1]
+    P = 1
+    for d in lead:
+        P *= d
+
+    def fu(x):
+        return jnp.broadcast_to(jnp.asarray(x, jnp.float32),
+                                lead + (N,)).reshape(P, N)
+
+    def fs(x):
+        return jnp.broadcast_to(jnp.asarray(x, jnp.float32),
+                                lead).reshape(P)
+
+    b, f, p, t, R, b_sum, feas = _sb.sroa_solve_pallas(
+        fu(A), fu(J), fu(H), fu(delta), fu(h), fu(f_max), fu(p_max),
+        fs(B), fs(b_max), fs(N0), fs(lam), fs(E_cloud_total),
+        b_iters=b_iters, f_iters=f_iters, p_iters=p_iters, t_iters=t_iters,
+        eps0=eps0, eps1=eps1, eps2=eps2, t_low=t_low, t_up=t_up,
+        interpret=interpret)
+    return (b.reshape(lead + (N,)), f.reshape(lead + (N,)),
+            p.reshape(lead + (N,)), t.reshape(lead), R.reshape(lead),
+            b_sum.reshape(lead), feas.reshape(lead))
+
+
+@partial(jax.jit, static_argnames=("k", "interpret"))
+def topk_move_scores(gain, H, p_max, assign, mask, N0, B, *, k: int,
+                     interpret: bool | None = None):
+    """Top-k move pruning: cheapest k (user, dst) moves per cell.
+
+    gain is (..., N, M); H/p_max/assign/mask are (..., N); N0/B are (...)
+    or scalar.  Leading axes flatten into the kernel's problem axis.
+    Returns (user, dst, score), each (..., k); entries with
+    ``score >= 1e29`` are padding (fewer than k valid moves).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    gain = jnp.asarray(gain, jnp.float32)
+    lead, (N, M) = gain.shape[:-2], gain.shape[-2:]
+    P = 1
+    for d in lead:
+        P *= d
+
+    def fu(x, dtype):
+        return jnp.broadcast_to(jnp.asarray(x, dtype),
+                                lead + (N,)).reshape(P, N)
+
+    def fs(x):
+        return jnp.broadcast_to(jnp.asarray(x, jnp.float32),
+                                lead).reshape(P)
+
+    user, dst, score = _tk.topk_moves_pallas(
+        gain.reshape(P, N, M), fu(H, jnp.float32), fu(p_max, jnp.float32),
+        fu(assign, jnp.int32), fu(mask, jnp.float32), fs(N0), fs(B),
+        k=k, interpret=interpret)
+    return (user.reshape(lead + (k,)), dst.reshape(lead + (k,)),
+            score.reshape(lead + (k,)))
 
 
 @partial(jax.jit,

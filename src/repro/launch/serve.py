@@ -77,7 +77,8 @@ def run_service(args) -> dict:
         drift=DriftConfig(channel_threshold=args.drift_threshold,
                           objective_threshold=args.obj_threshold),
         event_rate=args.event_rate, replan_all=args.replan_all,
-        max_rounds=args.plan_rounds, escape_iters=2)
+        max_rounds=args.plan_rounds, escape_iters=2,
+        top_k=args.top_k, n_starts=args.n_starts)
     print(f"[serve] fleet: {fleet.C} cells, N_max={fleet.N_max}, "
           f"M={fleet.M} (streaming control plane, "
           f"{'replan-all' if args.replan_all else 'drift-gated'})")
@@ -108,7 +109,8 @@ def run_planner(args) -> dict:
     spec, fleet, cfg = _draw_serve_fleet(args)
     planner = FleetPlanner(lam=args.lam, cfg=cfg,
                            max_rounds=args.plan_rounds, escape_iters=2,
-                           use_engine=not args.host_loop)
+                           use_engine=not args.host_loop,
+                           top_k=args.top_k, n_starts=args.n_starts)
 
     route = "host loop" if args.host_loop else "device-resident engine"
     print(f"[plan] fleet: {fleet.C} cells, N_max={fleet.N_max}, "
@@ -171,6 +173,12 @@ def main(argv=None):
     ap.add_argument("--cell-users", type=int, default=12)
     ap.add_argument("--cell-edges", type=int, default=3)
     ap.add_argument("--lam", type=float, default=1.0)
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="engine move pruning: score only the k "
+                         "kernel-nominated moves per round (0 = full "
+                         "neighbourhood)")
+    ap.add_argument("--n-starts", type=int, default=1,
+                    help="engine multi-start restarts per search")
     ap.add_argument("--plan-rounds", type=int, default=12,
                     help="batched-TSIA iteration budget per cold plan")
     ap.add_argument("--event-rate", type=float, default=0.4,

@@ -155,6 +155,106 @@ def test_engine_zero_rounds_degenerate(scn10):
     assert np.isfinite(res.R) and res.history.solve_calls == 1
 
 
+# --------------------------------------- top-k pruning / multi-start (D9)
+def test_pruned_engine_within_one_percent_of_full(scn10):
+    """Tier-1 guard: the approximation contract of D9's move pruning.
+
+    With top_k nominated moves per round (k >= M-1 here, but far below
+    the full N*(M-1) neighbourhood) the pruned engine must land within
+    1% of the full-neighbourhood objective on the parity fixture.
+    """
+    full = incremental.solve(scn10, lam=LAM, cfg=CFG, max_rounds=24,
+                             escape_iters=4)
+    pruned = incremental.solve(scn10, lam=LAM, cfg=CFG, max_rounds=24,
+                               escape_iters=4, top_k=6)
+    assert pruned.R <= full.R * 1.01, (pruned.R, full.R)
+    # The trace accounting reflects the pruned candidate budget.
+    assert pruned.history.candidates_evaluated <= \
+        pruned.history.rounds * (1 + 6)
+    cb = evaluate(scn10, jnp.asarray(pruned.assign), pruned.sroa.b,
+                  pruned.sroa.f, pruned.sroa.p, LAM)
+    np.testing.assert_allclose(float(cb.R), pruned.R, rtol=1e-5)
+
+
+def test_multi_start_never_worse_than_single(scn10):
+    """Start 0 is the caller's init, so best-of-starts <= single-start."""
+    one = fengine.solve_assignment(scn10, lam=LAM, cfg=CFG, max_rounds=12,
+                                   escape_iters=2)
+    multi = fengine.solve_assignment(scn10, lam=LAM, cfg=CFG,
+                                     max_rounds=12, escape_iters=2,
+                                     n_starts=3)
+    assert float(multi.R) <= float(one.R) * (1 + 1e-6)
+
+
+def test_multi_start_masked_users_keep_init(scn10):
+    mask = np.ones(scn10.N, bool)
+    mask[[2, 5]] = False
+    init = np.asarray(wireless.nearest_edge_assignment(scn10))
+    res = incremental.solve(scn10, lam=LAM, cfg=CFG, init_assign=init,
+                            max_rounds=10, escape_iters=2, mask=mask,
+                            n_starts=3)
+    np.testing.assert_array_equal(res.assign[~mask], init[~mask])
+
+
+def test_pruned_multi_start_compose(scn10):
+    """top_k and n_starts together still dominate the pruned single."""
+    base = incremental.solve(scn10, lam=LAM, cfg=CFG, max_rounds=12,
+                             escape_iters=2, top_k=6)
+    both = incremental.solve(scn10, lam=LAM, cfg=CFG, max_rounds=12,
+                             escape_iters=2, top_k=6, n_starts=3)
+    assert both.R <= base.R * (1 + 1e-6)
+
+
+def test_candidate_search_flops_model():
+    """Full path grows ~N^2 in scoring flops; pruned path is linear."""
+    full_64 = fengine.candidate_search_flops(64, 4, 10, CFG)
+    full_128 = fengine.candidate_search_flops(128, 4, 10, CFG)
+    pr_64 = fengine.candidate_search_flops(64, 4, 10, CFG, top_k=8)
+    pr_128 = fengine.candidate_search_flops(128, 4, 10, CFG, top_k=8)
+    assert full_64["cands_per_round"] == 1 + 64 * 3
+    assert pr_64["cands_per_round"] == 1 + 8
+    # Doubling N roughly quadruples full scoring work, not pruned.
+    r_full = full_128["score_flops"] / full_64["score_flops"]
+    r_pruned = pr_128["score_flops"] / pr_64["score_flops"]
+    assert r_full > 3.5
+    assert r_pruned < 2.5
+
+
+# ------------------------------------------------------ bucketed scheduling
+def test_bucketed_fleet_matches_unbucketed():
+    """Difficulty-bucketed scheduling is a pure reordering: same results."""
+    fleet = fbatch.draw_fleet(7, 6, SPEC, n_range=(4, 10))
+    out = fengine.solve_fleet_assignments(fleet, lam=LAM, cfg=CFG,
+                                          max_rounds=8, escape_iters=2)
+    outb = fengine.solve_fleet_assignments_bucketed(
+        fleet, lam=LAM, cfg=CFG, max_rounds=8, escape_iters=2,
+        n_buckets=2)
+    out = jax.tree.map(np.asarray, out)
+    outb = jax.tree.map(np.asarray, outb)
+    np.testing.assert_allclose(outb.R, out.R, rtol=1e-6)
+    np.testing.assert_array_equal(outb.assign, out.assign)
+
+
+def test_bucketed_falls_back_on_tiny_fleets():
+    fleet = fbatch.draw_fleet(2, 2, SPEC, n_range=(4, 6))
+    out = fengine.solve_fleet_assignments(fleet, lam=LAM, cfg=CFG,
+                                          max_rounds=6, escape_iters=1)
+    outb = fengine.solve_fleet_assignments_bucketed(
+        fleet, lam=LAM, cfg=CFG, max_rounds=6, escape_iters=1,
+        n_buckets=4)
+    np.testing.assert_allclose(np.asarray(outb.R), np.asarray(out.R),
+                               rtol=1e-6)
+
+
+def test_difficulty_proxy_shape_and_order():
+    fleet = fbatch.draw_fleet(9, 5, SPEC, n_range=(4, 10))
+    d = np.asarray(fengine.difficulty_proxy(fleet))
+    assert d.shape == (5,)
+    n_act = np.asarray(fleet.mask).sum(axis=1)
+    # More active users never scores easier than the emptiest cell.
+    assert d[np.argmax(n_act)] >= d[np.argmin(n_act)]
+
+
 # -------------------------------------------------------------- fleet vmap
 @pytest.mark.slow
 def test_fleet_engine_matches_per_cell_searches():

@@ -117,6 +117,146 @@ def test_rmsnorm_sweep(shape, dtype):
                                rtol=tol, atol=tol)
 
 
+# ------------------------------------------------- fused SROA solve (D9)
+@pytest.mark.parametrize("n", [1, 7, 50])
+def test_fused_solve_matches_jnp_nest(n):
+    """The one-kernel Algorithm 2-4 nest == the jnp bisection nest.
+
+    Non-power-of-two and N=1 shapes exercise the kernel's padding path
+    (neutral users with A=J=H=delta=0, h=f_max=p_max=1).
+    """
+    import dataclasses
+
+    from repro.core import sroa, wireless
+    from repro.core.system_model import sroa_constants
+
+    spec = dataclasses.replace(wireless.ScenarioSpec(), N=n, M=2)
+    scn = wireless.draw_scenario(n, spec)
+    assign = wireless.nearest_edge_assignment(scn)
+    consts = sroa_constants(scn, assign)
+    cfg = sroa.SroaConfig(b_iters=30, f_iters=24, p_iters=20, t_iters=28)
+    want = sroa.solve_constants_impl(consts, scn.B_total, scn.B_total, scn.f_max,
+                                     scn.p_max, scn.N0, 1.0, cfg)
+    got = sroa.solve_constants_impl(
+        consts, scn.B_total, scn.B_total, scn.f_max, scn.p_max, scn.N0, 1.0,
+        dataclasses.replace(cfg, fused=True))
+    assert bool(got.feasible) == bool(want.feasible)
+    np.testing.assert_allclose(float(got.R), float(want.R), rtol=5e-3)
+    np.testing.assert_allclose(float(got.t), float(want.t), rtol=5e-3)
+    np.testing.assert_allclose(got.b, want.b, rtol=5e-3, atol=1.0)
+
+
+def test_fused_solve_masked_user_is_neutral():
+    """A masked-out user must not perturb the fused solve of the rest."""
+    import dataclasses
+
+    from repro.core import sroa, wireless
+    from repro.core.system_model import mask_constants, sroa_constants
+
+    spec = dataclasses.replace(wireless.ScenarioSpec(), N=6, M=2)
+    scn = wireless.draw_scenario(11, spec)
+    consts = sroa_constants(scn, wireless.nearest_edge_assignment(scn))
+    mask = jnp.asarray([True, True, False, True, True, True])
+    cfg = sroa.SroaConfig(b_iters=30, f_iters=24, p_iters=20, t_iters=28,
+                          fused=True)
+    res = sroa.solve_constants_impl(mask_constants(consts, mask), scn.B_total,
+                                    scn.B_total, scn.f_max, scn.p_max, scn.N0,
+                                    1.0, cfg)
+    assert np.isfinite(float(res.R))
+    # The masked user's rate target is 0, so its bandwidth share is ~0.
+    assert float(res.b[2]) < float(res.b[mask].min())
+
+
+@pytest.mark.parametrize("shape", [(3, 17), (2, 3, 5), (1, 1)])
+def test_batched_invert_odd_shapes(shape):
+    """sroa_invert_rate_batched flattens ragged leading axes correctly."""
+    key = jax.random.PRNGKey(shape[0])
+    G = jnp.abs(jax.random.normal(key, shape)) * 1e6 + 1e3
+    tgt = jnp.abs(jax.random.normal(jax.random.PRNGKey(9), shape)) * 1e4
+    got = ops.sroa_invert_rate_batched(G, tgt, 1e7)
+    want = ref.invert_rate_ref(G.reshape(-1), tgt.reshape(-1),
+                               1e7).reshape(shape)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+# --------------------------------------------------- top-k move pruning
+def _topk_reference(gain, H, p_max, assign, mask, N0, B, k):
+    """Numpy oracle for the kernel's score model (module docstring)."""
+    gain, H, p_max = map(np.asarray, (gain, H, p_max))
+    assign = np.asarray(assign)
+    mask = np.asarray(mask, bool)
+    N, M = gain.shape
+    n_act = max(mask.sum(), 1)
+    b_ref = B / n_act
+    se = np.log1p(gain * p_max[:, None] / (N0 * b_ref)) / np.log(2.0)
+    a = H[:, None] / np.maximum(se, 1e-9)
+    c_m = np.bincount(assign[mask], minlength=M).astype(float)
+    score = np.full((N, M), 1e30)
+    for n in range(N):
+        if not mask[n]:
+            continue
+        s = assign[n]
+        for m in range(M):
+            if m == s:
+                continue
+            score[n, m] = (a[n, m] * (1 + (c_m[m] + 1) / n_act)
+                           - a[n, s] * (1 + c_m[s] / n_act))
+    order = np.argsort(score, axis=None, kind="stable")[:k]
+    return order // M, order % M, score.flat[order]
+
+
+def test_topk_moves_matches_reference():
+    key = jax.random.PRNGKey(5)
+    N, M, k = 9, 4, 6
+    gain = jnp.abs(jax.random.normal(key, (N, M))) * 1e-7 + 1e-9
+    H = jnp.full((N,), 2.4e5)
+    p_max = jnp.full((N,), 0.2)
+    assign = jax.random.randint(jax.random.PRNGKey(6), (N,), 0, M)
+    mask = jnp.asarray([True] * 7 + [False, True])
+    user, dst, score = ops.topk_move_scores(
+        gain, H, p_max, assign, mask, 1e-17, 1e7, k=k)
+    ru, rd, rs = _topk_reference(gain, H, p_max, assign, mask, 1e-17, 1e7,
+                                 k)
+    np.testing.assert_array_equal(np.asarray(user), ru)
+    np.testing.assert_array_equal(np.asarray(dst), rd)
+    np.testing.assert_allclose(np.asarray(score), rs, rtol=1e-5)
+    # No nominated move may target the user's own edge or a masked user.
+    assert (np.asarray(dst) != np.asarray(assign)[np.asarray(user)]).all()
+    assert np.asarray(mask)[np.asarray(user)].all()
+
+
+def test_topk_moves_pads_when_few_valid():
+    """k larger than the number of legal moves -> +BIG padding entries."""
+    gain = jnp.abs(jax.random.normal(jax.random.PRNGKey(7), (2, 2))) * 1e-8
+    user, dst, score = ops.topk_move_scores(
+        gain, jnp.full((2,), 1e5), jnp.full((2,), 0.1),
+        jnp.asarray([0, 1], jnp.int32), jnp.ones(2, bool), 1e-17, 1e7,
+        k=5)
+    score = np.asarray(score)
+    assert (score[:2] < 1e29).all() and (score[2:] >= 1e29).all()
+
+
+def test_topk_moves_vmaps_over_cells():
+    """A leading cell axis flattens into one kernel launch (fleet path)."""
+    P, N, M, k = 3, 6, 3, 4
+    gain = jnp.abs(jax.random.normal(jax.random.PRNGKey(8),
+                                     (P, N, M))) * 1e-7 + 1e-9
+    H = jnp.full((P, N), 2.4e5)
+    pm = jnp.full((P, N), 0.2)
+    assign = jax.random.randint(jax.random.PRNGKey(9), (P, N), 0, M)
+    mask = jnp.ones((P, N), bool)
+    user, dst, score = ops.topk_move_scores(
+        gain, H, pm, assign, mask, jnp.full((P,), 1e-17),
+        jnp.full((P,), 1e7), k=k)
+    assert user.shape == (P, k)
+    for i in range(P):
+        u1, d1, s1 = ops.topk_move_scores(
+            gain[i], H[i], pm[i], assign[i], mask[i], 1e-17, 1e7, k=k)
+        np.testing.assert_array_equal(np.asarray(user[i]), np.asarray(u1))
+        np.testing.assert_allclose(np.asarray(score[i]), np.asarray(s1),
+                                   rtol=1e-6)
+
+
 def test_model_attention_pallas_path_matches_chunked():
     """ArchConfig.attn_impl='pallas' agrees with the default chunked path."""
     from repro.models.layers import attention
