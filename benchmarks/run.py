@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fleet — batched vs looped SROA + batched TSIA    [bench_fleet]
   engine — device-resident assignment engine       [bench_engine]
   serve — streaming control plane under load       [bench_serve]
+  horizon — rolling-horizon (MPC) vs snapshot      [bench_horizon]
 
 ``--json PATH`` additionally writes every row as structured JSON — with
 run metadata (git rev, jax version, backend/device, timestamp) — so
@@ -92,13 +93,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: sroa,lambda,tsia,convergence,"
-                         "hfl_vs_fl,roofline,fleet,engine,serve")
+                         "hfl_vs_fl,roofline,fleet,engine,serve,horizon")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as JSON to PATH")
     args = ap.parse_args()
     from benchmarks import (bench_convergence, bench_engine, bench_fleet,
-                            bench_hfl_vs_fl, bench_lambda, bench_serve,
-                            bench_sroa, bench_tsia, roofline)
+                            bench_hfl_vs_fl, bench_horizon, bench_lambda,
+                            bench_serve, bench_sroa, bench_tsia, roofline)
     suites = {
         "sroa": bench_sroa.run,
         "lambda": bench_lambda.run,
@@ -109,6 +110,7 @@ def main() -> None:
         "fleet": bench_fleet.run,
         "engine": bench_engine.run,
         "serve": bench_serve.run,
+        "horizon": bench_horizon.run,
     }
     wanted = args.only.split(",") if args.only else list(suites)
     unknown = [w for w in wanted if w not in suites]

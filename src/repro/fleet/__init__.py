@@ -7,6 +7,8 @@
 * :mod:`repro.fleet.incremental` — engine front end + PR 1 host reference
   loop and warm-start re-planning.
 * :mod:`repro.fleet.planner`     — the cached :class:`FleetPlanner` facade.
+* :mod:`repro.fleet.horizon`     — rolling-horizon (MPC) planning over a
+  predicted mobility window with switching costs (DESIGN.md D10).
 * :mod:`repro.fleet.service`     — the streaming control plane
   (tick loop, drift-gated replanning, request coalescing, sharding,
   telemetry) serving live traffic over all of the above.
@@ -19,6 +21,8 @@ from repro.fleet.engine import (EngineResult, EngineTrace, solve_assignment,
 from repro.fleet.planner import FleetPlanner, PlanResult, scenario_digest
 from repro.fleet.service import (PlanningService, ServiceConfig,
                                  solve_fleet_sharded)
+from repro.fleet.horizon import (HorizonConfig, count_handovers,
+                                 estimate_switch_cost, plan_fleet_horizon)
 
 __all__ = [
     "FleetScenario", "candidate_assigns_device", "draw_fleet",
@@ -28,4 +32,6 @@ __all__ = [
     "solve_fleet_assignments",
     "FleetPlanner", "PlanResult", "scenario_digest",
     "PlanningService", "ServiceConfig", "solve_fleet_sharded",
+    "HorizonConfig", "count_handovers", "estimate_switch_cost",
+    "plan_fleet_horizon",
 ]

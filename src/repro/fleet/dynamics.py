@@ -107,6 +107,21 @@ def fading_step(scn: Scenario, state: DynamicsState,
     return scn2, state._replace(shadow_ue_db=shadow)
 
 
+def _draw_slots(rng: np.random.Generator, free: np.ndarray,
+                n_arr: int) -> np.ndarray:
+    """Uniform draw of arrival slots from the free pool.
+
+    ``free[:n_arr]`` would always refill the lowest-index slots, biasing
+    slot reuse (a freshly freed low slot is recycled far more often than a
+    high one).  Drawing without replacement keeps slot reuse exchangeable
+    while traces stay deterministic under a fixed seed.
+    """
+    n_take = min(n_arr, free.size)
+    if n_take == 0:
+        return free[:0]
+    return rng.choice(free, size=n_take, replace=False)
+
+
 def churn_step(scn: Scenario, state: DynamicsState,
                rng: np.random.Generator,
                spec: ScenarioSpec | None = None, dt: float = 1.0,
@@ -135,7 +150,7 @@ def churn_step(scn: Scenario, state: DynamicsState,
 
     n_arr = int(rng.poisson(arrival_rate * dt))
     free = np.flatnonzero(~active)
-    take = free[:n_arr]
+    take = _draw_slots(rng, free, n_arr)
     dropped = max(0, n_arr - free.size)
     for slot in take:
         active[slot] = True
@@ -266,7 +281,7 @@ def fleet_step(fleet, state: FleetDynamicsState, rng: np.random.Generator,
     dropped = np.zeros(C, np.int64)
     for i in np.flatnonzero(n_arr):
         free = np.flatnonzero(~active[i])
-        take = free[:n_arr[i]]
+        take = _draw_slots(rng, free, int(n_arr[i]))
         dropped[i] = max(0, int(n_arr[i]) - free.size)
         for slot in take:
             active[i, slot] = True
@@ -300,6 +315,73 @@ def fleet_step(fleet, state: FleetDynamicsState, rng: np.random.Generator,
     return fleet2, state2, FleetEvents(changed=changed, arrived=arrived,
                                        departed=departed, dropped=dropped,
                                        faded=faded)
+
+
+# ------------------------------------------------------- horizon prediction
+def _rollout_positions(pos: np.ndarray, vel: np.ndarray, K: int, dt: float,
+                       memory: float, side_m: float) -> list[np.ndarray]:
+    """Deterministic K-slot Gauss-Markov mean rollout of positions.
+
+    Slot 0 is the current position; slot k extrapolates the expected
+    mobility state (``E[v'] = memory * v``, noise is zero-mean) with the
+    same wall reflection as the live step.  Works for any leading batch
+    shape (..., N, 2).
+    """
+    out = [pos]
+    p, v = pos, vel
+    for _ in range(1, K):
+        v = memory * v
+        raw = p + v * dt
+        p = np.abs(raw)
+        p = side_m - np.abs(side_m - p)
+        v = np.where((raw < 0.0) | (raw > side_m), -v, v)
+        out.append(p)
+    return out
+
+
+def predict_rollout(scn: Scenario, state: DynamicsState, K: int,
+                    cfg: "StreamConfig | None" = None) -> np.ndarray:
+    """(K, N, M) predicted channel-gain stack for one cell (DESIGN.md D10).
+
+    A deterministic mean rollout of the Gauss-Markov mobility state:
+    positions extrapolate under the expected (decayed) velocity, gains
+    follow the new geometry with the CURRENT shadowing held fixed.  No
+    fading redraws, no churn draws — the rollout predicts exactly what the
+    mobility model makes predictable and nothing more.  Slot 0 is the
+    as-is current gain (bit-identical to ``scn.gain``), so a horizon-1
+    stack scores exactly the snapshot problem.
+    """
+    cfg = cfg or StreamConfig()
+    pos = _rollout_positions(np.asarray(scn.user_pos, np.float64),
+                             state.velocity, K, cfg.dt, cfg.memory,
+                             cfg.side_m)
+    edge = np.asarray(scn.edge_pos, np.float64)
+    stack = np.stack([_gains(p, edge, state.shadow_ue_db) for p in pos])
+    stack[0] = np.asarray(scn.gain, np.float64)
+    return stack.astype(np.float32)
+
+
+def predict_fleet_rollout(fleet, state: FleetDynamicsState, K: int,
+                          cfg: "StreamConfig | None" = None,
+                          rows: np.ndarray | None = None) -> np.ndarray:
+    """(C, K, N, M) predicted-gain stacks for a whole fleet at once.
+
+    Batched :func:`predict_rollout`: one stacked numpy rollout for every
+    cell, slot 0 bit-identical to the live gains.  ``rows`` selects which
+    cells of ``state`` the (possibly sliced) ``fleet`` corresponds to —
+    the control plane replans sub-fleets, whose dynamics state lives in
+    the full-fleet arrays.
+    """
+    cfg = cfg or StreamConfig()
+    vel = state.velocity if rows is None else state.velocity[rows]
+    shadow = (state.shadow_ue_db if rows is None
+              else state.shadow_ue_db[rows])
+    pos = _rollout_positions(np.asarray(fleet.cells.user_pos, np.float64),
+                             vel, K, cfg.dt, cfg.memory, cfg.side_m)
+    edge = np.asarray(fleet.cells.edge_pos, np.float64)
+    stack = np.stack([_fleet_gains(p, edge, shadow) for p in pos], axis=1)
+    stack[:, 0] = np.asarray(fleet.cells.gain, np.float64)
+    return stack.astype(np.float32)
 
 
 @dataclasses.dataclass(frozen=True)

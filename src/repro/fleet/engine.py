@@ -71,6 +71,10 @@ class EngineResult(NamedTuple):
     converged: jnp.ndarray  # () bool — stopped by revisit/exhaustion,
     #                              not by the round cap
     trace: EngineTrace
+    R_search: jnp.ndarray   # () f32 objective the search minimized: equal
+    #                              to ``R`` for snapshot searches, the
+    #                              time-expanded sum + switching cost for
+    #                              horizon searches (DESIGN.md D10)
 
 
 class _EngineState(NamedTuple):
@@ -175,9 +179,61 @@ def _score_neighbourhood(scn: Scenario, cands: jnp.ndarray,
     return res, ev
 
 
+def switch_counts(cands: jnp.ndarray, incumbent: jnp.ndarray,
+                  mask: jnp.ndarray) -> jnp.ndarray:
+    """(A,) handovers each candidate pattern costs vs the incumbent plan.
+
+    A handover is an ACTIVE user whose edge differs from the deployed
+    (incumbent) assignment — each one pays the model re-upload, however
+    many descent rounds produced the final pattern (the cost attaches to
+    deploying the plan, not to the search path that found it).
+    """
+    diff = (cands != incumbent[None, :]) & mask[None, :]
+    return diff.sum(axis=1).astype(jnp.float32)
+
+
+def _score_horizon(scn: Scenario, gain_stack: jnp.ndarray,
+                   cands: jnp.ndarray, mask: jnp.ndarray, lam,
+                   cfg: sroa.SroaConfig, incumbent: jnp.ndarray,
+                   switch_cost: float):
+    """Time-expanded scoring: every candidate against all K predicted slots.
+
+    The horizon objective per candidate is
+
+        R_h = sum_k R(cand; gain_k)  +  switch_cost * handovers(cand)
+
+    — the cumulative eq-15 cost over the predicted window plus a one-time
+    switching charge per user moved off the incumbent assignment.  Returns
+    the slot-0 (current channel) SROA/evaluation — the escape heuristic
+    and best-ever bookkeeping read those exactly as on the snapshot path —
+    plus the (A,) horizon objective that drives descent.  K == 1 skips
+    the slot vmap entirely, so a horizon-1 stack whose slot 0 is the live
+    gain scores BIT-IDENTICALLY to the snapshot path (the parity the
+    tier-1 tests pin).
+    """
+    K = gain_stack.shape[0]
+    n_sw = switch_counts(cands, incumbent, mask)
+    if K == 1:
+        res, ev = _score_neighbourhood(scn._replace(gain=gain_stack[0]),
+                                       cands, mask, lam, cfg)
+        return res, ev, ev.R + switch_cost * n_sw
+
+    def one_slot(g):
+        return _score_neighbourhood(scn._replace(gain=g), cands, mask,
+                                    lam, cfg)
+
+    res_k, ev_k = jax.vmap(one_slot)(gain_stack)
+    res0 = jax.tree.map(lambda x: x[0], res_k)
+    ev0 = jax.tree.map(lambda x: x[0], ev_k)
+    return res0, ev0, ev_k.R.sum(axis=0) + switch_cost * n_sw
+
+
 def engine_core(scn: Scenario, init_assign: jnp.ndarray, mask: jnp.ndarray,
                 lam, cfg: sroa.SroaConfig, max_rounds: int,
-                escape_iters: int, top_k: int = 0) -> EngineResult:
+                escape_iters: int, top_k: int = 0,
+                gain_stack: jnp.ndarray | None = None,
+                switch_cost: float = 0.0,
+                incumbent: jnp.ndarray | None = None) -> EngineResult:
     """The traceable search loop (vmap this for fleets; jit it via
     :func:`solve_assignment`).
 
@@ -187,20 +243,40 @@ def engine_core(scn: Scenario, init_assign: jnp.ndarray, mask: jnp.ndarray,
     instead of O(N*M), making the round's scoring cost independent of the
     neighbourhood size.  Descent, escape, best-ever tracking and Remark-1
     convergence are unchanged — only which moves get scored.
+
+    ``gain_stack`` (K, N, M) switches scoring to the time-expanded horizon
+    objective (D10): each candidate is SROA-scored against every predicted
+    slot and charged ``switch_cost`` per active user moved off the
+    ``incumbent`` (deployed) assignment, so the descent minimizes the
+    cumulative cost of the predicted window plus the handover bill.  The
+    loop machinery is untouched — only the per-candidate score widens.
+    Move nomination (``top_k``) and the Definition-1/2 escape stay on the
+    current (slot-0) channel.  ``incumbent`` defaults to ``init_assign``.
     """
     N, M = scn.N, scn.M
     T = int(max_rounds)
     lam = jnp.asarray(lam, jnp.float32)
     init = jnp.asarray(init_assign, jnp.int32)
     mask = jnp.asarray(mask, bool)
+    horizon_mode = gain_stack is not None
+    if horizon_mode:
+        incumbent = init if incumbent is None else jnp.asarray(incumbent,
+                                                               jnp.int32)
+        switch_cost = float(switch_cost)
 
     def body(st: _EngineState) -> _EngineState:
         if top_k > 0:
             cands, valid = _pruned_candidates(scn, st.current, mask, top_k)
         else:
             cands, valid = candidate_assigns_device(st.current, M, mask)
-        res, ev = _score_neighbourhood(scn, cands, mask, lam, cfg)
-        Rv = jnp.where(valid, ev.R, _BIG)
+        if horizon_mode:
+            res, ev, R_score = _score_horizon(scn, gain_stack, cands, mask,
+                                              lam, cfg, incumbent,
+                                              switch_cost)
+        else:
+            res, ev = _score_neighbourhood(scn, cands, mask, lam, cfg)
+            R_score = ev.R
+        Rv = jnp.where(valid, R_score, _BIG)
         j = jnp.argmin(Rv)                 # first minimum; index 0 on ties
         R0 = Rv[0]
         improving = Rv[j] < R0
@@ -276,9 +352,13 @@ def engine_core(scn: Scenario, init_assign: jnp.ndarray, mask: jnp.ndarray,
     res = sroa.solve_constants_impl(consts, B, B, scn.f_max, scn.p_max,
                                     scn.N0, lam, cfg)
     ev = evaluate(scn, st.best_assign, res.b, res.f, res.p, lam, mask)
+    # R stays the CURRENT-slot eq-15 cost of the winning pattern (what the
+    # data plane reprices); R_search is the objective the descent actually
+    # minimized, which the horizon path needs to compare restarts.
     return EngineResult(assign=st.best_assign, R=ev.R, sroa=res,
                         rounds=st.rounds, escapes=st.escapes,
-                        converged=st.converged, trace=st.trace)
+                        converged=st.converged, trace=st.trace,
+                        R_search=st.best_R if horizon_mode else ev.R)
 
 
 def _start_patterns(scn: Scenario, init: jnp.ndarray, mask: jnp.ndarray,
@@ -305,7 +385,10 @@ def _start_patterns(scn: Scenario, init: jnp.ndarray, mask: jnp.ndarray,
 def search_core(scn: Scenario, init_assign: jnp.ndarray, mask: jnp.ndarray,
                 lam, cfg: sroa.SroaConfig, max_rounds: int,
                 escape_iters: int, top_k: int = 0,
-                n_starts: int = 1) -> EngineResult:
+                n_starts: int = 1,
+                gain_stack: jnp.ndarray | None = None,
+                switch_cost: float = 0.0,
+                incumbent: jnp.ndarray | None = None) -> EngineResult:
     """Multi-start wrapper around :func:`engine_core` (still traceable).
 
     ``n_starts > 1`` vmaps the whole search loop over distinct initial
@@ -314,30 +397,42 @@ def search_core(scn: Scenario, init_assign: jnp.ndarray, mask: jnp.ndarray,
     whose final evaluate-R is best.  Because start 0 is the caller's init,
     the result is never worse than the single-start search with the same
     knobs (the property the tier-1 guard tests assert).
+
+    On the horizon path the incumbent assignment is shared by every
+    restart (the switching bill is against the DEPLOYED plan, whatever
+    pattern a restart explores from) and the winner is chosen by the
+    horizon objective (``R_search``), not the current-slot R.
     """
+    if gain_stack is not None and incumbent is None:
+        incumbent = jnp.asarray(init_assign, jnp.int32)
     if n_starts <= 1:
         return engine_core(scn, init_assign, mask, lam, cfg, max_rounds,
-                           escape_iters, top_k)
+                           escape_iters, top_k, gain_stack, switch_cost,
+                           incumbent)
     init = jnp.asarray(init_assign, jnp.int32)
     inits = _start_patterns(scn, init, jnp.asarray(mask, bool), n_starts)
 
     def one(ia):
         return engine_core(scn, ia, mask, lam, cfg, max_rounds,
-                           escape_iters, top_k)
+                           escape_iters, top_k, gain_stack, switch_cost,
+                           incumbent)
 
     res = jax.vmap(one)(inits)
-    i = jnp.argmin(res.R)
+    i = jnp.argmin(res.R_search if gain_stack is not None else res.R)
     return jax.tree.map(lambda x: x[i], res)
 
 
 @partial(jax.jit, static_argnames=("cfg", "max_rounds", "escape_iters",
-                                   "top_k", "n_starts"))
+                                   "top_k", "n_starts", "switch_cost"))
 def solve_assignment(scn: Scenario, init_assign: jnp.ndarray | None = None,
                      mask: jnp.ndarray | None = None, lam=1.0,
                      cfg: sroa.SroaConfig = sroa.SroaConfig(),
                      max_rounds: int = 48,
                      escape_iters: int = 6, top_k: int = 0,
-                     n_starts: int = 1) -> EngineResult:
+                     n_starts: int = 1,
+                     gain_stack: jnp.ndarray | None = None,
+                     switch_cost: float = 0.0,
+                     incumbent: jnp.ndarray | None = None) -> EngineResult:
     """One cell's ENTIRE assignment search as one jitted call.
 
     Args:
@@ -355,24 +450,44 @@ def solve_assignment(scn: Scenario, init_assign: jnp.ndarray | None = None,
                     (sub-quadratic rounds, see D9).
       n_starts:     parallel restarts from distinct initial patterns;
                     best final objective wins (never worse than 1).
+      gain_stack:   optional (K, N, M) predicted-gain stack (slot 0 = the
+                    current channel): switches to the time-expanded
+                    horizon objective (D10).
+      switch_cost:  per-handover charge (weighted cost units) against the
+                    incumbent assignment; static — one compile per value.
+      incumbent:    (N,) deployed assignment handovers are billed against
+                    (defaults to ``init_assign``).
     """
     if mask is None:
         mask = jnp.ones((scn.N,), bool)
     if init_assign is None:
         init_assign = nearest_edge_assignment(scn)
+    if gain_stack is not None and gain_stack.shape[0] == 1 \
+            and switch_cost == 0.0:
+        # K=1 with no switching charge IS snapshot planning: route through
+        # the identical snapshot computation (slot 0 is the live channel by
+        # the rollout contract) so the parity is bitwise, not approximate —
+        # a differently-fused horizon program can drift by an ulp.
+        scn = scn._replace(gain=jnp.asarray(gain_stack[0], scn.gain.dtype))
+        gain_stack = incumbent = None
     return search_core(scn, init_assign, mask, lam, cfg, max_rounds,
-                       escape_iters, top_k, n_starts)
+                       escape_iters, top_k, n_starts, gain_stack,
+                       switch_cost, incumbent)
 
 
 @partial(jax.jit, static_argnames=("cfg", "max_rounds", "escape_iters",
-                                   "top_k", "n_starts"))
+                                   "top_k", "n_starts", "switch_cost"))
 def solve_fleet_assignments(fleet: FleetScenario,
                             init_assigns: jnp.ndarray | None = None,
                             lam=1.0,
                             cfg: sroa.SroaConfig = sroa.SroaConfig(),
                             max_rounds: int = 48,
                             escape_iters: int = 6, top_k: int = 0,
-                            n_starts: int = 1) -> EngineResult:
+                            n_starts: int = 1,
+                            gain_stacks: jnp.ndarray | None = None,
+                            switch_cost: float = 0.0,
+                            incumbents: jnp.ndarray | None = None
+                            ) -> EngineResult:
     """Full assignment searches for EVERY cell of a fleet in one call.
 
     ``jax.vmap`` of :func:`search_core` over the stacked cells: every leaf
@@ -381,17 +496,38 @@ def solve_fleet_assignments(fleet: FleetScenario,
     the batched while_loop (their element-wise state is frozen) until the
     slowest cell finishes — still zero host round trips overall (see
     :func:`solve_fleet_assignments_bucketed` for the scheduling fix).
+    ``gain_stacks`` (C, K, N, M) — with ``switch_cost``/``incumbents`` —
+    switches every cell to the time-expanded horizon objective (D10).
     """
     if init_assigns is None:
         init_assigns = fleet_assignments(fleet)
     lam_v = jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (fleet.C,))
+    init = jnp.asarray(init_assigns, jnp.int32)
+    if gain_stacks is not None and gain_stacks.shape[1] == 1 \
+            and switch_cost == 0.0:
+        # K=1 + zero switching charge degenerates to snapshot planning:
+        # use the snapshot program itself so parity is bitwise (the
+        # horizon vmap fuses differently and can drift by an ulp).
+        gain = jnp.asarray(gain_stacks[:, 0], fleet.cells.gain.dtype)
+        fleet = fleet._replace(cells=fleet.cells._replace(gain=gain))
+        gain_stacks = incumbents = None
+    if gain_stacks is None:
+        def one(cell, init_a, mask, l):
+            return search_core(cell, init_a, mask, l, cfg, max_rounds,
+                               escape_iters, top_k, n_starts)
 
-    def one(cell, init, mask, l):
-        return search_core(cell, init, mask, l, cfg, max_rounds,
-                           escape_iters, top_k, n_starts)
+        return jax.vmap(one)(fleet.cells, init, fleet.mask, lam_v)
+    if incumbents is None:
+        incumbents = init
 
-    return jax.vmap(one)(fleet.cells, jnp.asarray(init_assigns, jnp.int32),
-                         fleet.mask, lam_v)
+    def one_h(cell, init_a, mask, l, gs, inc):
+        return search_core(cell, init_a, mask, l, cfg, max_rounds,
+                           escape_iters, top_k, n_starts, gs, switch_cost,
+                           inc)
+
+    return jax.vmap(one_h)(fleet.cells, init, fleet.mask, lam_v,
+                           jnp.asarray(gain_stacks, jnp.float32),
+                           jnp.asarray(incumbents, jnp.int32))
 
 
 def difficulty_proxy(fleet: FleetScenario) -> jnp.ndarray:

@@ -1,0 +1,130 @@
+"""Rolling-horizon (MPC-style) fleet planning — DESIGN.md D10.
+
+The paper's TSIA optimizes a snapshot: every replan is memoryless, so
+under Gauss-Markov mobility a user drifting along an edge boundary
+ping-pongs between edges, paying the model re-upload at every handover.
+This module plans over a PREDICTED WINDOW instead:
+
+1. :func:`repro.fleet.dynamics.predict_rollout` extrapolates the mobility
+   state K slots ahead (deterministic mean rollout — no fading or churn
+   draws) into a (K, N, M) predicted-gain stack, slot 0 = the live
+   channel;
+2. the engine's descent/escape ``lax.while_loop`` runs unchanged, but
+   each candidate is scored against ALL K slots plus a switching cost
+   charging the model re-upload for every user moved off the incumbent
+   (deployed) assignment — :func:`repro.fleet.engine._score_horizon`;
+3. :func:`plan_fleet_horizon` batches that over a fleet (vmap, optionally
+   shard_mapped over devices), so MPC planning costs the same number of
+   host round trips as snapshot planning: one.
+
+Horizon 1 with zero switching cost scores bit-identically to the
+snapshot path (the parity the tier-1 tests pin); K >= 4 with a calibrated
+switching cost dominates snapshot replanning on cumulative cost plus
+handovers — ``benchmarks/bench_horizon.py`` measures exactly that.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sroa
+from repro.core.system_model import rate
+from repro.fleet import batch as fbatch
+from repro.fleet import dynamics
+from repro.fleet import engine as fengine
+from repro.fleet.service import shard as fshard
+
+
+@dataclasses.dataclass(frozen=True)
+class HorizonConfig:
+    """Rolling-horizon knobs (see DESIGN.md D10 for the contract).
+
+    ``K`` slots are scored per candidate (1 = snapshot planning);
+    ``switch_cost`` is the weighted-cost charge per handover — calibrate
+    it with :func:`estimate_switch_cost` so it tracks the actual model
+    re-upload airtime, or set it by policy.
+    """
+
+    K: int = 4
+    switch_cost: float = 0.0
+
+
+def count_handovers(prev_assigns: np.ndarray, assigns: np.ndarray,
+                    active: np.ndarray) -> int:
+    """Users active in ``active`` whose edge changed between two plans.
+
+    Churn arrivals/departures are excluded by ``active`` (pass the AND of
+    both ticks' activity): a brand-new user getting its first edge is not
+    a handover, and a departed slot's stale value costs nothing.
+    """
+    prev = np.asarray(prev_assigns)
+    cur = np.asarray(assigns)
+    return int(((prev != cur) & np.asarray(active, bool)).sum())
+
+
+def estimate_switch_cost(fleet: fbatch.FleetScenario, assigns: np.ndarray,
+                         alloc: sroa.SroaResult, lam: float = 1.0) -> float:
+    """Calibrate the per-handover charge from a live allocation.
+
+    A handover forces one model re-upload over the new link; its weighted
+    cost is approximately the user's CURRENT upload airtime cost,
+    ``E_com + lam * T_com = (p + lam) * s_bits / r``.  The fleet-mean over
+    active users is a single scalar the engine can take as a static — an
+    estimate, not an oracle: the post-handover rate differs, but the scale
+    (seconds of airtime, not slots of eq-15 cost) is what matters for the
+    descent trade-off.
+    """
+    assigns = np.asarray(assigns, np.int32)
+    gain = np.asarray(fleet.cells.gain, np.float64)          # (C, N, M)
+    g_own = np.take_along_axis(gain, assigns[..., None],
+                               axis=2)[..., 0]               # (C, N)
+    b = np.asarray(alloc.b, np.float64)
+    p = np.asarray(alloc.p, np.float64)
+    N0 = np.asarray(fleet.cells.N0, np.float64)[:, None]
+    r = np.asarray(rate(jnp.asarray(b), jnp.asarray(g_own),
+                        jnp.asarray(p), jnp.asarray(N0)), np.float64)
+    s_bits = np.asarray(fleet.cells.s_bits, np.float64)[:, None]
+    t_up = np.where(r > 0, s_bits / np.maximum(r, 1e-9), 0.0)
+    w = np.asarray(fleet.mask, bool)
+    cost = (p + lam) * t_up
+    n_act = max(int(w.sum()), 1)
+    return float(np.where(w, cost, 0.0).sum() / n_act)
+
+
+def plan_fleet_horizon(fleet: fbatch.FleetScenario,
+                       state: dynamics.FleetDynamicsState,
+                       K: int = 4, switch_cost: float = 0.0,
+                       incumbents: np.ndarray | None = None,
+                       init_assigns: np.ndarray | None = None,
+                       lam=1.0,
+                       cfg: sroa.SroaConfig = sroa.SroaConfig(),
+                       stream_cfg: dynamics.StreamConfig | None = None,
+                       max_rounds: int = 48, escape_iters: int = 6,
+                       top_k: int = 0, n_starts: int = 1,
+                       mesh=None, rows: np.ndarray | None = None,
+                       gain_stacks: np.ndarray | None = None
+                       ) -> fengine.EngineResult:
+    """MPC plan for every cell of a fleet in ONE device call.
+
+    Builds the (C, K, N, M) predicted-gain stacks from the fleet's
+    dynamics state and runs the time-expanded engine search, sharded over
+    devices when a mesh is given.  ``incumbents`` is the deployed
+    assignment the switching cost bills against (defaults to the warm
+    start, i.e. ``init_assigns``); ``rows`` maps a sliced sub-fleet back
+    to its rows of the full-fleet ``state``; callers that already built
+    the stacks (e.g. to digest them for a cache key) pass ``gain_stacks``
+    and skip the rollout.
+    """
+    stacks = (gain_stacks if gain_stacks is not None
+              else dynamics.predict_fleet_rollout(fleet, state, K,
+                                                  cfg=stream_cfg,
+                                                  rows=rows))
+    return fshard.solve_fleet_sharded(
+        fleet, init_assigns, lam, cfg, max_rounds, escape_iters,
+        mesh=mesh, top_k=top_k, n_starts=n_starts,
+        gain_stacks=jnp.asarray(stacks),
+        switch_cost=float(switch_cost),
+        incumbents=None if incumbents is None
+        else jnp.asarray(np.asarray(incumbents), jnp.int32))

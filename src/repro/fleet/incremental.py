@@ -109,23 +109,36 @@ def solve(scn: Scenario, lam=1.0,
           init_assign: np.ndarray | None = None,
           max_rounds: int = 64, escape_iters: int = 8,
           mask: np.ndarray | None = None, top_k: int = 0,
-          n_starts: int = 1) -> BatchedTsiaResult:
+          n_starts: int = 1,
+          gain_stack: np.ndarray | None = None,
+          switch_cost: float = 0.0,
+          incumbent: np.ndarray | None = None) -> BatchedTsiaResult:
     """Device-resident batched TSIA: ONE jitted call for the whole search.
 
     ``mask`` marks active users (inactive slots are never moved and carry
     zero cost); it is how churned scenarios from
     :mod:`repro.fleet.dynamics` are planned without reshaping.
     ``top_k``/``n_starts`` are the engine's sub-quadratic search knobs
-    (move pruning + parallel restarts; DESIGN.md D9).
+    (move pruning + parallel restarts; DESIGN.md D9); ``gain_stack``
+    (K, N, M, e.g. :func:`repro.fleet.dynamics.predict_rollout`) with
+    ``switch_cost``/``incumbent`` switches to the time-expanded horizon
+    objective (D10).
     """
     jmask = (jnp.ones((scn.N,), bool) if mask is None
              else jnp.asarray(mask, bool))
     init = (None if init_assign is None
             else jnp.asarray(np.asarray(init_assign), jnp.int32))
+    gs = (None if gain_stack is None
+          else jnp.asarray(np.asarray(gain_stack), jnp.float32))
+    inc = (None if incumbent is None
+           else jnp.asarray(np.asarray(incumbent), jnp.int32))
     res = fengine.solve_assignment(scn, init, jmask, lam, cfg=cfg,
                                    max_rounds=max_rounds,
                                    escape_iters=escape_iters,
-                                   top_k=top_k, n_starts=n_starts)
+                                   top_k=top_k, n_starts=n_starts,
+                                   gain_stack=gs,
+                                   switch_cost=float(switch_cost),
+                                   incumbent=inc)
     n_movable = int(np.asarray(jmask).sum())
     hist = _history_from_trace(res, n_movable, scn.M, top_k)
     return BatchedTsiaResult(assign=np.asarray(res.assign),
@@ -227,23 +240,31 @@ def replan(scn: Scenario, prev_assign: np.ndarray, lam=1.0,
            mask: np.ndarray | None = None,
            max_rounds: int = 16, escape_iters: int = 2,
            use_engine: bool = True, top_k: int = 0,
-           n_starts: int = 1) -> BatchedTsiaResult:
+           n_starts: int = 1,
+           gain_stack: np.ndarray | None = None,
+           switch_cost: float = 0.0) -> BatchedTsiaResult:
     """Warm-start re-planning after a dynamics event.
 
     Keeps the previous assignment for surviving users (their optimum moves
     slowly under mobility/fading) and seeds arrivals — ``new_users`` slot
     indices, e.g. ``ChurnEvents.arrived`` — by nearest-edge init, then runs
-    a short batched-TSIA polish instead of a cold full search.
+    a short batched-TSIA polish instead of a cold full search.  With a
+    ``gain_stack`` (horizon mode, engine path only) the previous
+    assignment doubles as the incumbent the switching cost bills against.
     """
     init = np.array(prev_assign, np.int32).copy()
     init = np.clip(init, 0, scn.M - 1)
     if new_users is not None and len(new_users):
         ne = np.asarray(nearest_edge_assignment(scn))
         init[np.asarray(new_users, int)] = ne[np.asarray(new_users, int)]
+    # Arrivals have no deployed edge to hand over FROM: their incumbent is
+    # the nearest-edge seed, so parking them there is free.
+    incumbent = init.copy()
     if use_engine:
         return solve(scn, lam, cfg, init_assign=init, max_rounds=max_rounds,
                      escape_iters=escape_iters, mask=mask, top_k=top_k,
-                     n_starts=n_starts)
+                     n_starts=n_starts, gain_stack=gain_stack,
+                     switch_cost=switch_cost, incumbent=incumbent)
     return solve_host(scn, lam, cfg, init_assign=init,
                       max_rounds=max_rounds, escape_iters=escape_iters,
                       mask=mask)

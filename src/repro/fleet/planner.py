@@ -75,13 +75,22 @@ class FleetPlanner:
       n_buckets:    > 1 schedules batched fleet plans in difficulty-sorted
                     buckets (:func:`repro.fleet.engine
                     .solve_fleet_assignments_bucketed`).
+      horizon:      rolling-horizon window K (DESIGN.md D10): plans made
+                    through :meth:`plan_fleet_horizon` — or :meth:`plan`
+                    with an explicit ``gain_stack`` — score candidates
+                    against K predicted slots instead of the snapshot
+                    (1 = snapshot planning; requires ``use_engine``).
+      switch_cost:  weighted-cost charge per user handed over from the
+                    incumbent assignment on the horizon path (see
+                    :func:`repro.fleet.horizon.estimate_switch_cost`).
     """
 
     def __init__(self, lam: float = 1.0,
                  cfg: sroa.SroaConfig = sroa.SroaConfig(),
                  cache_size: int = 256, max_rounds: int = 48,
                  escape_iters: int = 6, use_engine: bool = True,
-                 top_k: int = 0, n_starts: int = 1, n_buckets: int = 1):
+                 top_k: int = 0, n_starts: int = 1, n_buckets: int = 1,
+                 horizon: int = 1, switch_cost: float = 0.0):
         self.lam = float(lam)
         self.cfg = cfg
         self.cache_size = cache_size
@@ -91,6 +100,8 @@ class FleetPlanner:
         self.top_k = int(top_k)
         self.n_starts = int(n_starts)
         self.n_buckets = int(n_buckets)
+        self.horizon = int(horizon)
+        self.switch_cost = float(switch_cost)
         self._cache: OrderedDict[str, PlanResult] = OrderedDict()
         self.hits = 0
         self.misses = 0
@@ -118,13 +129,32 @@ class FleetPlanner:
                 "hit_rate": self.hits / total if total else 0.0}
 
     # ------------------------------------------------------------ planning
+    def _horizon_extra(self, gain_stack, incumbent=None) -> bytes:
+        """Cache-key bytes for a horizon plan: same scenario + lambda +
+        mask can yield DIFFERENT plans under different predicted windows,
+        switching costs, or incumbents — all three join the digest."""
+        h = b"horizon" + np.float64(self.switch_cost).tobytes()
+        h += np.asarray(gain_stack, np.float32).tobytes()
+        if incumbent is not None:
+            h += np.asarray(incumbent, np.int32).tobytes()
+        return h
+
     def plan(self, scn: Scenario, warm_assign: np.ndarray | None = None,
              new_users: np.ndarray | None = None,
-             mask: np.ndarray | None = None) -> PlanResult:
-        """Plan one cell: cache lookup, else (warm-started) batched TSIA."""
+             mask: np.ndarray | None = None,
+             gain_stack: np.ndarray | None = None) -> PlanResult:
+        """Plan one cell: cache lookup, else (warm-started) batched TSIA.
+
+        ``gain_stack`` (K, N, M, from
+        :func:`repro.fleet.dynamics.predict_rollout`) plans on the
+        time-expanded horizon objective (D10); the warm assignment doubles
+        as the incumbent the planner's ``switch_cost`` bills against.
+        """
         if mask is not None and np.all(mask):
             mask = None                  # all-active == unmasked plan
-        key = scenario_digest(scn, self.lam, mask)
+        extra = (b"" if gain_stack is None
+                 else self._horizon_extra(gain_stack, warm_assign))
+        key = scenario_digest(scn, self.lam, mask, extra=extra)
         hit = self._lookup(key)
         if hit is not None:
             return hit
@@ -136,13 +166,19 @@ class FleetPlanner:
                                      escape_iters=self.escape_iters,
                                      use_engine=self.use_engine,
                                      top_k=self.top_k,
-                                     n_starts=self.n_starts)
+                                     n_starts=self.n_starts,
+                                     gain_stack=gain_stack,
+                                     switch_cost=self.switch_cost)
         elif self.use_engine:
+            # Cold plans have no deployed assignment: a switching charge
+            # is meaningless, so the horizon stack (if any) rides with
+            # zero switch_cost.
             res = incremental.solve(scn, self.lam, self.cfg,
                                     max_rounds=self.max_rounds,
                                     escape_iters=self.escape_iters,
                                     mask=mask, top_k=self.top_k,
-                                    n_starts=self.n_starts)
+                                    n_starts=self.n_starts,
+                                    gain_stack=gain_stack)
         else:
             res = incremental.solve_host(scn, self.lam, self.cfg,
                                          max_rounds=self.max_rounds,
@@ -238,6 +274,69 @@ class FleetPlanner:
                 n = int(fleet.n_users[i])
                 # ONE device call covers every miss cell: charge it to the
                 # first plan so summed telemetry stays exact (1/C per cell).
+                plan = PlanResult(
+                    assign=out.assign[row][:n], b=out.sroa.b[row][:n],
+                    f=out.sroa.f[row][:n], p=out.sroa.p[row][:n],
+                    R=float(out.R[row]), t=float(out.sroa.t[row]),
+                    cached=False, solve_calls=1 if row == 0 else 0,
+                    plan_ms=ms)
+                self._insert(keys[i], plan)
+                plans[i] = plan
+        return [plans[i] for i in range(fleet.C)]
+
+    def plan_fleet_horizon(self, fleet: fbatch.FleetScenario, state,
+                           incumbents: np.ndarray | None = None,
+                           stream_cfg=None, mesh=None,
+                           rows: np.ndarray | None = None
+                           ) -> list[PlanResult]:
+        """MPC-plan a fleet over the planner's horizon (cache-aware).
+
+        Rolls the fleet's dynamics ``state`` K slots ahead, then runs the
+        time-expanded engine search for every cache-miss cell in one
+        device call (:func:`repro.fleet.horizon.plan_fleet_horizon`).
+        Cache keys fold in the predicted stacks, switch cost, and
+        incumbents, so a horizon plan never aliases a snapshot plan for
+        the same channel draw.
+        """
+        from repro.fleet import dynamics as fdyn
+        from repro.fleet import horizon as fhorizon
+
+        stacks = fdyn.predict_fleet_rollout(fleet, state, self.horizon,
+                                            cfg=stream_cfg, rows=rows)
+        inc = (None if incumbents is None
+               else np.asarray(incumbents, np.int32))
+        keys = [scenario_digest(
+            fleet.cell(i), self.lam,
+            extra=self._horizon_extra(stacks[i],
+                                      None if inc is None else inc[i]))
+            for i in range(fleet.C)]
+        plans: dict[int, PlanResult] = {}
+        miss = []
+        for i, k in enumerate(keys):
+            hit = self._lookup(k)
+            if hit is not None:
+                plans[i] = hit
+            else:
+                miss.append(i)
+        if miss:
+            sel = np.asarray(miss)
+            full = len(miss) == fleet.C
+            sub = (fleet if full
+                   else jax.tree.map(lambda x: x[sel], fleet))
+            t0 = time.perf_counter()
+            out = fhorizon.plan_fleet_horizon(
+                sub, state, K=self.horizon, switch_cost=self.switch_cost,
+                incumbents=None if inc is None else inc[sel],
+                init_assigns=None if inc is None else inc[sel],
+                lam=self.lam, cfg=self.cfg, stream_cfg=stream_cfg,
+                max_rounds=self.max_rounds,
+                escape_iters=self.escape_iters, top_k=self.top_k,
+                n_starts=self.n_starts, mesh=mesh,
+                gain_stacks=stacks if full else stacks[sel])
+            out = jax.tree.map(np.asarray, out)
+            ms = (time.perf_counter() - t0) * 1e3 / len(miss)
+            for row, i in enumerate(miss):
+                n = int(fleet.n_users[i])
                 plan = PlanResult(
                     assign=out.assign[row][:n], b=out.sroa.b[row][:n],
                     f=out.sroa.f[row][:n], p=out.sroa.p[row][:n],

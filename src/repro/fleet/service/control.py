@@ -59,6 +59,8 @@ class ServiceConfig:
     shard: bool = True         # shard the cell axis over visible devices
     top_k: int = 0             # engine move pruning (0 = full nbhd; D9)
     n_starts: int = 1          # engine multi-start restarts (D9)
+    horizon: int = 1           # predicted slots per plan (1 = snapshot; D10)
+    switch_cost: float = 0.0   # weighted-cost charge per handover (D10)
 
 
 class TickRecord(NamedTuple):
@@ -71,6 +73,7 @@ class TickRecord(NamedTuple):
     coalesced: int             # largest request group sharing the call
     tick_ms: float
     drift: fdrift.DriftReport | None
+    handovers: int = 0         # active users whose edge changed this tick
 
 
 class PlanningService:
@@ -101,11 +104,29 @@ class PlanningService:
         self._bootstrap()
 
     # -------------------------------------------------------------- engine
-    def _engine(self, fleet, init_assigns):
+    def _horizon_mode(self) -> bool:
+        return self.cfg.horizon > 1 or self.cfg.switch_cost != 0.0
+
+    def _engine(self, fleet, init_assigns, rows=None):
+        gs = inc = None
+        sc = 0.0
+        if self._horizon_mode():
+            # MPC mode (D10): score candidates against the K-slot predicted
+            # channel and bill handovers off the deployed assignment.
+            # ``rows`` maps a sliced sub-fleet back to its rows of the full
+            # dynamics state so the rollout extrapolates the right users.
+            gs = jnp.asarray(dynamics.predict_fleet_rollout(
+                fleet, self.state, self.cfg.horizon, cfg=self.cfg.stream,
+                rows=rows), jnp.float32)
+            if init_assigns is not None:
+                # Cold bootstraps have nothing deployed: no switching cost.
+                inc = jnp.asarray(init_assigns, jnp.int32)
+                sc = float(self.cfg.switch_cost)
         return fshard.solve_fleet_sharded(
             fleet, init_assigns, self.lam, self.sroa_cfg,
             self.cfg.max_rounds, self.cfg.escape_iters, mesh=self.mesh,
-            top_k=self.cfg.top_k, n_starts=self.cfg.n_starts)
+            top_k=self.cfg.top_k, n_starts=self.cfg.n_starts,
+            gain_stacks=gs, switch_cost=sc, incumbents=inc)
 
     def _reprice(self) -> sroa.SroaResult:
         """Batched SROA of the current assignments under the live channel."""
@@ -140,7 +161,7 @@ class PlanningService:
             idx = np.arange(b) % C
             sub = jax.tree.map(lambda x, i=idx: x[jnp.asarray(i)],
                                self.fleet)
-            self._engine(sub, jnp.asarray(self.assigns[idx]))
+            self._engine(sub, jnp.asarray(self.assigns[idx]), rows=idx)
 
     # --------------------------------------------------------------- cache
     def _cell_row(self, i: int) -> Scenario:
@@ -186,7 +207,7 @@ class PlanningService:
                 ne = np.asarray(fbatch.fleet_assignments(sub))
                 init = np.where(ev.arrived[pidx], ne, init)
             init = jnp.asarray(init, jnp.int32)
-        out = self._engine(sub, init)
+        out = self._engine(sub, init, rows=pidx)
         self.assigns[idx] = np.asarray(out.assign)[:k]
 
     # ---------------------------------------------------------------- serve
@@ -199,6 +220,8 @@ class PlanningService:
         """One control-plane tick: dynamics, drift, replan, serve."""
         t0 = time.perf_counter()
         C = self.fleet.C
+        prev_assigns = self.assigns.copy()
+        prev_active = np.asarray(self.state.active, bool).copy()
         ev = None
         if advance:
             cm = self.rng.uniform(size=C) < self.cfg.event_rate
@@ -212,8 +235,13 @@ class PlanningService:
         report = fdrift.score(gain_now, self.gain_ref, self.state.active,
                               np.asarray(alloc.R), self.R_ref,
                               self.cfg.drift)
-        forced = (ev.arrived.any(axis=1) if ev is not None
-                  else np.zeros(C, bool))
+        # Churn forces a re-search both ways: arrivals need a first
+        # assignment, and departures free bandwidth/compute the survivors'
+        # optimum shifts onto — drift scoring alone can miss either (the
+        # repriced R of a shrunken cell DROPS, which never trips the
+        # objective gate).
+        forced = (ev.arrived.any(axis=1) | ev.departed.any(axis=1)
+                  if ev is not None else np.zeros(C, bool))
         if self.cfg.replan_all:
             idx = np.arange(C)
         else:
@@ -255,16 +283,23 @@ class PlanningService:
                 self.telemetry.record_request(r.resolve(resp))
                 served += 1
         changed = int(ev.changed.sum()) if ev is not None else 0
+        # A handover is an edge change for a user active in BOTH plans:
+        # churn arrivals (first edge) and departures (stale slot) are free.
+        handovers = int(((prev_assigns != self.assigns)
+                         & prev_active
+                         & np.asarray(self.state.active, bool)).sum())
         self.telemetry.record_tick(
             n_cells=C, n_changed=changed, n_replanned=idx.size,
             engine_calls=engine_calls, alloc_calls=alloc_calls,
             sum_R=sum_R, tick_ms=tick_ms, drift_scores=report.channel,
-            coalesced=coalesced)
+            objective_scores=report.objective, coalesced=coalesced,
+            handovers=handovers)
         rec = TickRecord(tick=self.tick_idx, changed=changed,
                          replanned=np.asarray(idx),
                          engine_calls=engine_calls, sum_R=sum_R,
                          served=served, coalesced=coalesced,
-                         tick_ms=tick_ms, drift=report)
+                         tick_ms=tick_ms, drift=report,
+                         handovers=handovers)
         self.tick_idx += 1
         return rec
 

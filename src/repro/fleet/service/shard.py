@@ -28,18 +28,32 @@ from repro.runtime.sharding import cell_mesh  # noqa: F401  (re-export)
 
 @lru_cache(maxsize=None)
 def _sharded_solver(mesh: Mesh, cfg: sroa.SroaConfig, max_rounds: int,
-                    escape_iters: int, top_k: int = 0, n_starts: int = 1):
+                    escape_iters: int, top_k: int = 0, n_starts: int = 1,
+                    switch_cost: float = 0.0, horizon: bool = False):
     """Build (once per mesh/config) the jitted shard-mapped fleet solver."""
     axis = mesh.axis_names[0]
 
-    def local(cells, init, mask, lam_v):
-        def one(cell, ia, mk, lam):
-            return fengine.search_core(cell, ia, mk, lam, cfg, max_rounds,
-                                       escape_iters, top_k, n_starts)
-        return jax.vmap(one)(cells, init, mask, lam_v)
+    if horizon:
+        # Horizon operands (predicted-gain stacks + incumbent assignments)
+        # shard over the cell axis exactly like the fleet leaves.
+        def local(cells, init, mask, lam_v, gains, incs):
+            def one(cell, ia, mk, lam, gs, inc):
+                return fengine.search_core(cell, ia, mk, lam, cfg,
+                                           max_rounds, escape_iters, top_k,
+                                           n_starts, gs, switch_cost, inc)
+            return jax.vmap(one)(cells, init, mask, lam_v, gains, incs)
+        n_in = 6
+    else:
+        def local(cells, init, mask, lam_v):
+            def one(cell, ia, mk, lam):
+                return fengine.search_core(cell, ia, mk, lam, cfg,
+                                           max_rounds, escape_iters, top_k,
+                                           n_starts)
+            return jax.vmap(one)(cells, init, mask, lam_v)
+        n_in = 4
 
     fn = shard_map(local, mesh=mesh,
-                   in_specs=(P(axis), P(axis), P(axis), P(axis)),
+                   in_specs=(P(axis),) * n_in,
                    out_specs=P(axis),
                    # the engine is a lax.while_loop, which has no
                    # replication rule — and needs none: every input and
@@ -61,7 +75,11 @@ def solve_fleet_sharded(fleet: fbatch.FleetScenario,
                         cfg: sroa.SroaConfig = sroa.SroaConfig(),
                         max_rounds: int = 48, escape_iters: int = 6,
                         mesh: Mesh | None = None, top_k: int = 0,
-                        n_starts: int = 1) -> fengine.EngineResult:
+                        n_starts: int = 1,
+                        gain_stacks: jnp.ndarray | None = None,
+                        switch_cost: float = 0.0,
+                        incumbents: jnp.ndarray | None = None
+                        ) -> fengine.EngineResult:
     """Fleet-wide assignment search, sharded over devices when available.
 
     ``mesh`` is a 1-D cell mesh (``repro.runtime.sharding.cell_mesh``);
@@ -69,25 +87,42 @@ def solve_fleet_sharded(fleet: fbatch.FleetScenario,
     device count by repeating the last cell (its duplicate rows are
     dropped from the result), so any fleet size works on any mesh.
     ``top_k``/``n_starts`` are the engine's sub-quadratic search knobs
-    (DESIGN.md D9); they shard like every other static.
+    (DESIGN.md D9); ``gain_stacks`` (C, K, N, M) with
+    ``switch_cost``/``incumbents`` the rolling-horizon knobs (D10) — the
+    per-cell predicted stacks shard over the cell axis like every other
+    fleet leaf.
     """
     if init_assigns is None:
         init_assigns = fbatch.fleet_assignments(fleet)
+    if gain_stacks is not None and gain_stacks.shape[1] == 1 \
+            and switch_cost == 0.0:
+        # K=1 + zero switching charge == snapshot planning; route through
+        # the snapshot program for bitwise parity (see engine.py).
+        gain = jnp.asarray(gain_stacks[:, 0], fleet.cells.gain.dtype)
+        fleet = fleet._replace(cells=fleet.cells._replace(gain=gain))
+        gain_stacks = incumbents = None
     if mesh is None:
         return fengine.solve_fleet_assignments(
             fleet, init_assigns, lam, cfg, max_rounds, escape_iters,
-            top_k, n_starts)
+            top_k, n_starts, gain_stacks=gain_stacks,
+            switch_cost=switch_cost, incumbents=incumbents)
     C = fleet.C
     ndev = int(np.prod(mesh.devices.shape))
     pad = (-C) % ndev
     init = jnp.asarray(init_assigns, jnp.int32)
     lam_v = jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (C,))
     cells, mask = fleet.cells, fleet.mask
+    horizon = gain_stacks is not None
+    operands = [cells, init, mask, lam_v]
+    if horizon:
+        operands.append(jnp.asarray(gain_stacks, jnp.float32))
+        operands.append(init if incumbents is None
+                        else jnp.asarray(incumbents, jnp.int32))
     if pad:
-        cells, init, mask, lam_v = (_pad_rows(t, pad) for t in
-                                    (cells, init, mask, lam_v))
+        operands = [_pad_rows(t, pad) for t in operands]
     out = _sharded_solver(mesh, cfg, max_rounds, escape_iters, top_k,
-                          n_starts)(cells, init, mask, lam_v)
+                          n_starts, float(switch_cost),
+                          horizon)(*operands)
     if pad:
         out = jax.tree.map(lambda x: x[:C], out)
     return out

@@ -22,8 +22,13 @@ import time
 
 import numpy as np
 
-# Channel-drift histogram bin edges (relative mean |delta gain|).
-DRIFT_BINS = (0.0, 0.005, 0.01, 0.02, 0.05, 0.1, 0.2, 0.5, 1.0, np.inf)
+# Drift histogram bin edges.  The leading -inf edge is an underflow bin:
+# objective drift is signed (a replanned cell can land BELOW its reference
+# R, giving a negative score) and a histogram starting at 0.0 would silently
+# drop those ticks — every recorded score must land in some bin, so the
+# histogram total stays equal to the number of scores fed in.
+DRIFT_BINS = (-np.inf, 0.0, 0.005, 0.01, 0.02, 0.05, 0.1, 0.2, 0.5, 1.0,
+              np.inf)
 
 
 class Telemetry:
@@ -46,9 +51,11 @@ class Telemetry:
         self.served = 0               # answered
         self.coalesced_max = 0        # largest single-call request group
         self.objective_sum = 0.0      # repriced sum R accumulated over ticks
+        self.handovers = 0            # active users whose edge changed
         self.latencies_ms: list[float] = []
         self.tick_ms: list[float] = []
         self.drift_hist = np.zeros(len(self.drift_bins) - 1, np.int64)
+        self.objective_hist = np.zeros(len(self.drift_bins) - 1, np.int64)
 
     # ------------------------------------------------------------- recording
     def record_request(self, latency_ms: float) -> None:
@@ -58,7 +65,8 @@ class Telemetry:
     def record_tick(self, n_cells: int, n_changed: int, n_replanned: int,
                     engine_calls: int, alloc_calls: int, sum_R: float,
                     tick_ms: float, drift_scores=None,
-                    coalesced: int = 0) -> None:
+                    objective_scores=None, coalesced: int = 0,
+                    handovers: int = 0) -> None:
         self.ticks += 1
         self.cells += int(n_cells)
         self.cells_changed += int(n_changed)
@@ -66,17 +74,26 @@ class Telemetry:
         self.engine_calls += int(engine_calls)
         self.alloc_calls += int(alloc_calls)
         self.objective_sum += float(sum_R)
+        self.handovers += int(handovers)
         self.tick_ms.append(float(tick_ms))
         self.coalesced_max = max(self.coalesced_max, int(coalesced))
         if drift_scores is not None:
             hist, _ = np.histogram(np.asarray(drift_scores, np.float64),
                                    bins=self.drift_bins)
             self.drift_hist += hist
+        if objective_scores is not None:
+            hist, _ = np.histogram(np.asarray(objective_scores, np.float64),
+                                   bins=self.drift_bins)
+            self.objective_hist += hist
 
     # ------------------------------------------------------------- reporting
     @staticmethod
     def _pct(xs: list[float], q: float) -> float:
         return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+    def _hist_dict(self, counts: np.ndarray) -> dict:
+        return {f"<{hi:g}": int(n)
+                for hi, n in zip(self.drift_bins[1:], counts)}
 
     def snapshot(self) -> dict:
         elapsed = max(time.perf_counter() - self.t0, 1e-9)
@@ -95,13 +112,14 @@ class Telemetry:
             "alloc_calls": self.alloc_calls,
             "coalesced_max": self.coalesced_max,
             "objective_sum": self.objective_sum,
+            "handovers": self.handovers,
             "latency_ms": {"p50": self._pct(lat, 50),
                            "p99": self._pct(lat, 99),
                            "max": max(lat) if lat else 0.0},
             "tick_ms": {"p50": self._pct(self.tick_ms, 50),
                         "p99": self._pct(self.tick_ms, 99)},
-            "drift_hist": {f"<{hi:g}": int(n) for hi, n in
-                           zip(self.drift_bins[1:], self.drift_hist)},
+            "drift_hist": self._hist_dict(self.drift_hist),
+            "objective_drift_hist": self._hist_dict(self.objective_hist),
         }
 
     def emit(self, fh=None) -> str:

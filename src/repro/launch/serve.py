@@ -78,10 +78,14 @@ def run_service(args) -> dict:
                           objective_threshold=args.obj_threshold),
         event_rate=args.event_rate, replan_all=args.replan_all,
         max_rounds=args.plan_rounds, escape_iters=2,
-        top_k=args.top_k, n_starts=args.n_starts)
+        top_k=args.top_k, n_starts=args.n_starts,
+        horizon=args.horizon, switch_cost=args.switch_cost)
+    mode = "replan-all" if args.replan_all else "drift-gated"
+    if args.horizon > 1 or args.switch_cost:
+        mode += (f", horizon K={args.horizon}"
+                 f" switch_cost={args.switch_cost:g}")
     print(f"[serve] fleet: {fleet.C} cells, N_max={fleet.N_max}, "
-          f"M={fleet.M} (streaming control plane, "
-          f"{'replan-all' if args.replan_all else 'drift-gated'})")
+          f"M={fleet.M} (streaming control plane, {mode})")
     t0 = time.time()
     svc = PlanningService(fleet, lam=args.lam, sroa_cfg=cfg, cfg=svc_cfg,
                           spec=spec, seed=args.seed)
@@ -179,6 +183,13 @@ def main(argv=None):
                          "neighbourhood)")
     ap.add_argument("--n-starts", type=int, default=1,
                     help="engine multi-start restarts per search")
+    ap.add_argument("--horizon", type=int, default=1,
+                    help="rolling-horizon slots per plan: score candidates "
+                         "against K predicted channel slots (1 = snapshot "
+                         "planning; D10)")
+    ap.add_argument("--switch-cost", type=float, default=0.0,
+                    help="weighted-cost charge per handover off the "
+                         "deployed assignment (rolling-horizon mode)")
     ap.add_argument("--plan-rounds", type=int, default=12,
                     help="batched-TSIA iteration budget per cold plan")
     ap.add_argument("--event-rate", type=float, default=0.4,

@@ -145,6 +145,36 @@ def test_churn_respects_slot_pool(scn16):
     assert np.all(c >= spec.c_range[0]) and np.all(c <= spec.c_range[1])
 
 
+def test_churn_arrival_placement_deterministic_and_unbiased(scn16):
+    """ISSUE 8 regression for the `free[:n_arr]` arrival bias: arrivals
+    draw uniformly over the WHOLE free pool, and identical seeds still
+    replay identical churn traces (placement included)."""
+    spec = dataclasses.replace(wireless.ScenarioSpec(), N=16, M=3)
+    traces = []
+    for _ in range(2):
+        scn, state = scn16, dynamics.init_state(scn16, seed=0)
+        rng = np.random.default_rng(11)
+        evs = []
+        for _ in range(4):
+            scn, state, ev = dynamics.churn_step(scn, state, rng, spec,
+                                                 arrival_rate=3.0,
+                                                 departure_rate=0.4)
+            evs.append((np.asarray(ev.arrived).copy(),
+                        np.asarray(ev.departed).copy()))
+        traces.append(evs)
+    for (a1, d1), (a2, d2) in zip(*traces):
+        np.testing.assert_array_equal(a1, a2)
+        np.testing.assert_array_equal(d1, d2)
+    # Unbiasedness: the old code always refilled free[:n] (lowest slots).
+    free = np.arange(4, 16)
+    rng = np.random.default_rng(0)
+    picks = {int(dynamics._draw_slots(rng, free, 1)[0]) for _ in range(300)}
+    assert picks == set(free.tolist())
+    # Empty pool / oversubscribed draws degrade gracefully.
+    assert dynamics._draw_slots(rng, free[:0], 3).size == 0
+    assert sorted(dynamics._draw_slots(rng, free[:2], 5)) == [4, 5]
+
+
 def test_stream_yields_valid_scenarios(scn16):
     spec = dataclasses.replace(wireless.ScenarioSpec(), N=16, M=3)
     for scn, st, ev in dynamics.stream(scn16, seed=0, steps=3, spec=spec):

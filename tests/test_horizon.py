@@ -1,0 +1,206 @@
+"""Rolling-horizon (MPC) planning tests — DESIGN.md D10.
+
+Pins the contracts the horizon subsystem ships with: the deterministic
+mobility rollout (slot 0 bit-identical to the live channel), bitwise
+K=1 parity with snapshot planning, switching-cost hysteresis, handover
+accounting, and the planner/service integration.
+
+Shapes stay small (C=3, N=8, M=2-3) and share one SroaConfig so the
+engine compiles once per test session.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sroa, wireless
+from repro.fleet import batch as fbatch
+from repro.fleet import dynamics
+from repro.fleet import engine as fengine
+from repro.fleet import horizon as fhorizon
+from repro.fleet import incremental
+from repro.fleet.planner import FleetPlanner
+
+CFG = sroa.SroaConfig(b_iters=14, f_iters=10, p_iters=8, t_iters=10)
+SPEC = dataclasses.replace(wireless.ScenarioSpec(), N=8, M=3)
+LAM = 1.0
+
+
+def make_fleet(seed=0, C=3):
+    return fbatch.draw_fleet(seed, C, SPEC, n_range=(8, 8))
+
+
+def make_fleet_state(seed=0, C=3):
+    fleet = make_fleet(seed, C)
+    state = dynamics.init_fleet_state(fleet, seed=seed)
+    return fleet._replace(mask=jnp.asarray(state.active)), state
+
+
+# ------------------------------------------------------------ rollout
+def test_predict_rollout_slot0_is_live_channel_bitwise():
+    fleet, state = make_fleet_state()
+    stacks = dynamics.predict_fleet_rollout(fleet, state, K=4)
+    assert stacks.shape == (fleet.C, 4, fleet.N_max, fleet.M)
+    np.testing.assert_array_equal(
+        stacks[:, 0], np.asarray(fleet.cells.gain, np.float32))
+    assert np.all(np.isfinite(stacks)) and np.all(stacks > 0)
+
+
+def test_predict_rollout_is_deterministic_and_decays_motion():
+    fleet, state = make_fleet_state(seed=5)
+    a = dynamics.predict_fleet_rollout(fleet, state, K=6)
+    b = dynamics.predict_fleet_rollout(fleet, state, K=6)
+    np.testing.assert_array_equal(a, b)  # no random draws in the rollout
+    # Gauss-Markov mean velocity decays by `memory` each slot, so the
+    # predicted channel moves LESS per slot the further out it goes.
+    step = np.abs(np.diff(np.log(a.astype(np.float64)), axis=1))
+    per_slot = step.mean(axis=(0, 2, 3))
+    assert per_slot[-1] < per_slot[0]
+
+
+def test_predict_rollout_single_cell_matches_fleet_row():
+    fleet, state = make_fleet_state()
+    stacks = dynamics.predict_fleet_rollout(fleet, state, K=3)
+    cell_state = dynamics.DynamicsState(
+        velocity=state.velocity[1], shadow_ue_db=state.shadow_ue_db[1],
+        active=state.active[1], t=state.t)
+    one = dynamics.predict_rollout(fleet.cell(1), cell_state, K=3)
+    np.testing.assert_allclose(one, stacks[1], rtol=1e-6)
+
+
+def test_predict_fleet_rollout_rows_slices_state():
+    """A sliced sub-fleet rolled out with `rows` == the full-fleet rows."""
+    fleet, state = make_fleet_state()
+    full = dynamics.predict_fleet_rollout(fleet, state, K=3)
+    rows = np.array([2, 0])
+    import jax
+    sub = jax.tree.map(lambda x: x[jnp.asarray(rows)], fleet)
+    got = dynamics.predict_fleet_rollout(sub, state, K=3, rows=rows)
+    np.testing.assert_array_equal(got, full[rows])
+
+
+# ------------------------------------------------- K=1 snapshot parity
+def test_horizon_k1_zero_switch_cost_is_bitwise_snapshot():
+    """The ISSUE 8 parity gate: horizon=1, switch_cost=0 must reproduce
+    snapshot plans BIT-identically (assign, R, and the allocation)."""
+    fleet, state = make_fleet_state()
+    init = fbatch.fleet_assignments(fleet)
+    want = fengine.solve_fleet_assignments(fleet, init, LAM, CFG,
+                                           max_rounds=6, escape_iters=2)
+    got = fhorizon.plan_fleet_horizon(fleet, state, K=1, switch_cost=0.0,
+                                      init_assigns=init, lam=LAM, cfg=CFG,
+                                      max_rounds=6, escape_iters=2)
+    np.testing.assert_array_equal(np.asarray(got.assign),
+                                  np.asarray(want.assign))
+    np.testing.assert_array_equal(np.asarray(got.R), np.asarray(want.R))
+    np.testing.assert_array_equal(np.asarray(got.sroa.b),
+                                  np.asarray(want.sroa.b))
+    np.testing.assert_array_equal(np.asarray(got.R_search),
+                                  np.asarray(want.R))
+
+
+# --------------------------------------------------- switching hysteresis
+def test_prohibitive_switch_cost_freezes_the_incumbent():
+    """With an unaffordable switching charge every active user stays on
+    the deployed edge — the search still runs, it just can't pay."""
+    fleet, state = make_fleet_state()
+    init = fbatch.fleet_assignments(fleet)
+    out = fhorizon.plan_fleet_horizon(fleet, state, K=2, switch_cost=1e12,
+                                      incumbents=init, init_assigns=init,
+                                      lam=LAM, cfg=CFG, max_rounds=6,
+                                      escape_iters=2)
+    active = np.asarray(fleet.mask, bool)
+    moved = (np.asarray(out.assign) != np.asarray(init)) & active
+    assert moved.sum() == 0
+
+
+def test_switch_cost_reduces_handovers_monotonically_in_price():
+    fleet, state = make_fleet_state(seed=2)
+    # Incumbent = nearest edge; the engine WANTS to move users off it.
+    init = fbatch.fleet_assignments(fleet)
+    active = np.asarray(fleet.mask, bool)
+
+    def handovers(sc):
+        out = fhorizon.plan_fleet_horizon(
+            fleet, state, K=2, switch_cost=sc, incumbents=init,
+            init_assigns=init, lam=LAM, cfg=CFG, max_rounds=6,
+            escape_iters=2)
+        return int(((np.asarray(out.assign) != np.asarray(init))
+                    & active).sum())
+
+    free = handovers(0.0)
+    frozen = handovers(1e12)
+    assert free > 0            # seed chosen so snapshot wants to move
+    assert frozen == 0
+    assert handovers(50.0) <= free
+
+
+def test_engine_r_search_carries_the_horizon_objective():
+    """R stays the CURRENT-slot cost (the repricing/data-plane contract);
+    R_search is what the search minimized (K-slot sum + switch charge)."""
+    fleet, state = make_fleet_state()
+    init = fbatch.fleet_assignments(fleet)
+    out = fhorizon.plan_fleet_horizon(fleet, state, K=4, switch_cost=10.0,
+                                      incumbents=init, init_assigns=init,
+                                      lam=LAM, cfg=CFG, max_rounds=4,
+                                      escape_iters=1)
+    R = np.asarray(out.R)
+    Rs = np.asarray(out.R_search)
+    assert np.all(np.isfinite(R)) and np.all(np.isfinite(Rs))
+    # K slots of comparable per-slot cost: the searched objective must
+    # exceed any single slot's cost.
+    assert np.all(Rs > R)
+
+
+# -------------------------------------------------- handover accounting
+def test_count_handovers_excludes_churned_users():
+    prev = np.array([0, 1, 2, 0, 1])
+    cur = np.array([1, 1, 0, 0, 2])      # users 0, 2, 4 changed edge
+    active = np.array([True, True, False, True, True])
+    assert fhorizon.count_handovers(prev, cur, active) == 2
+    assert fhorizon.count_handovers(prev, prev, active) == 0
+    assert fhorizon.count_handovers(prev, cur, np.zeros(5, bool)) == 0
+
+
+def test_estimate_switch_cost_is_positive_airtime_scale():
+    fleet, _ = make_fleet_state()
+    init = fbatch.fleet_assignments(fleet)
+    alloc = fbatch.solve_batch(fleet, jnp.asarray(init), LAM, CFG)
+    sc = fhorizon.estimate_switch_cost(fleet, init, alloc, lam=LAM)
+    assert np.isfinite(sc) and sc > 0
+    # An upload airtime charge is a small fraction of a full eq-15 round.
+    assert sc < float(np.asarray(alloc.R).mean())
+
+
+# --------------------------------------------------- planner integration
+def test_planner_horizon_cache_distinguishes_windows():
+    fleet, state = make_fleet_state()
+    planner = FleetPlanner(lam=LAM, cfg=CFG, max_rounds=4, escape_iters=1,
+                           horizon=2, switch_cost=5.0)
+    inc = np.asarray(fbatch.fleet_assignments(fleet))
+    cold = planner.plan_fleet_horizon(fleet, state, incumbents=inc)
+    assert all(not p.cached for p in cold)
+    warm = planner.plan_fleet_horizon(fleet, state, incumbents=inc)
+    assert all(p.cached for p in warm)
+    for c, w in zip(cold, warm):
+        np.testing.assert_array_equal(c.assign, w.assign)
+    # A different dynamics state predicts a different window -> misses,
+    # even though the CURRENT channel (slot 0) is identical.
+    state2 = state._replace(velocity=state.velocity * 2.0)
+    fresh = planner.plan_fleet_horizon(fleet, state2, incumbents=inc)
+    assert all(not p.cached for p in fresh)
+
+
+def test_incremental_replan_forwards_horizon_to_engine():
+    fleet, state = make_fleet_state()
+    scn = fleet.cell(0)
+    cs = dynamics.DynamicsState(velocity=state.velocity[0],
+                                shadow_ue_db=state.shadow_ue_db[0],
+                                active=state.active[0], t=state.t)
+    stack = dynamics.predict_rollout(scn, cs, K=3)
+    base = incremental.solve(scn, LAM, CFG, max_rounds=4, escape_iters=1)
+    res = incremental.replan(scn, base.assign, LAM, CFG, max_rounds=4,
+                             escape_iters=1, gain_stack=stack,
+                             switch_cost=1e12)
+    # The incumbent is the warm start: at a prohibitive price nothing moves.
+    np.testing.assert_array_equal(res.assign, base.assign)

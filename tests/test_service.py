@@ -283,3 +283,96 @@ def test_service_prewarm_compiles_buckets_without_mutating_plans():
     assigns = svc.assigns.copy()
     svc.prewarm()
     np.testing.assert_array_equal(svc.assigns, assigns)
+
+
+# ------------------------------------------------------- churn-forced replans
+def test_departure_only_churn_forces_replan():
+    """ISSUE 8 regression: a cell that only LOSES users must re-search.
+
+    Departures free bandwidth/compute the survivors' optimum shifts onto,
+    but the repriced R of a shrunken cell DROPS — the objective drift gate
+    never fires — so the forced set must include departures, not just
+    arrivals."""
+    svc = make_service(
+        event_rate=1.0,
+        stream=dynamics.StreamConfig(arrival_rate=0.0, departure_rate=0.7),
+        drift=DriftConfig(channel_threshold=10.0, objective_threshold=10.0))
+    prev_active = svc.state.active.copy()
+    rec = svc.tick()
+    departed = (prev_active & ~svc.state.active).any(axis=1)
+    arrived = (~prev_active & svc.state.active).any(axis=1)
+    assert departed.any()          # seed chosen so cells actually shrink
+    assert not arrived.any()       # arrival_rate=0: departure-only tick
+    # Every departure-hit cell was re-searched despite zero drift signal.
+    assert set(np.flatnonzero(departed)) <= set(rec.replanned.tolist())
+
+
+# ----------------------------------------------------- telemetry edge cases
+def test_drift_histogram_underflow_bin_conserves_counts():
+    """Signed drift scores must all land in SOME bin: negative objective
+    drift (a replanned cell beating its reference R) goes to `<0`."""
+    from repro.fleet.service.telemetry import Telemetry
+
+    t = Telemetry()
+    scores = np.array([-0.5, -1e-9, 0.0, 0.003, 0.07, 2.0])
+    t.record_tick(n_cells=6, n_changed=0, n_replanned=0, engine_calls=0,
+                  alloc_calls=1, sum_R=0.0, tick_ms=1.0,
+                  drift_scores=scores, objective_scores=scores)
+    snap = t.snapshot()
+    for hist in (snap["drift_hist"], snap["objective_drift_hist"]):
+        assert hist["<0"] == 2
+        assert sum(hist.values()) == scores.size  # conservation
+
+
+def test_service_objective_hist_conserves_over_ticks():
+    svc = make_service(event_rate=1.0)
+    ticks = 3
+    svc.run(ticks)
+    snap = svc.telemetry.snapshot()
+    assert sum(snap["objective_drift_hist"].values()) == ticks * svc.fleet.C
+    assert sum(snap["drift_hist"].values()) == ticks * svc.fleet.C
+
+
+def test_telemetry_snapshot_empty_window_roundtrips():
+    import json
+
+    from repro.fleet.service.telemetry import Telemetry
+
+    t = Telemetry()
+    snap = t.snapshot()
+    assert snap["ticks"] == 0 and snap["requests_served"] == 0
+    assert snap["plans_per_s"] == 0.0 and snap["replan_fraction"] == 0.0
+    assert snap["latency_ms"] == {"p50": 0.0, "p99": 0.0, "max": 0.0}
+    assert snap["handovers"] == 0
+    assert sum(snap["drift_hist"].values()) == 0
+    assert json.loads(json.dumps(snap)) == snap
+
+
+def test_telemetry_requests_vs_served_stay_consistent():
+    svc = make_service()
+    req = svc.submit()
+    assert svc.telemetry.requests == 1 and svc.telemetry.served == 0
+    svc.tick(advance=False)
+    req.result(timeout=5)
+    assert svc.telemetry.served == svc.telemetry.requests == 1
+    snap = svc.telemetry.snapshot()
+    assert snap["requests_served"] == 1
+
+
+def test_tick_reports_handovers_of_surviving_users_only():
+    """Handovers count active-in-both-plans edge changes; a no-dynamics
+    tick with no replan hands nobody over."""
+    svc = make_service()
+    rec = svc.tick(advance=False)
+    assert rec.handovers == 0 and svc.telemetry.handovers == 0
+    # Force a full re-search under a shocked channel: any edge change now
+    # IS a handover, and telemetry accumulates the same count.
+    g = np.asarray(svc.fleet.cells.gain).copy()
+    g[:, :4, :] *= 25.0
+    svc.fleet = svc.fleet._replace(
+        cells=svc.fleet.cells._replace(gain=jnp.asarray(g)))
+    prev = svc.assigns.copy()
+    rec2 = svc.tick(advance=False)
+    want = int(((prev != svc.assigns) & svc.state.active).sum())
+    assert rec2.handovers == want
+    assert svc.telemetry.handovers == want
