@@ -1,0 +1,209 @@
+"""Heterogeneity benchmark: tier-aware + compression plans vs tier-blind.
+
+A 3-tier fleet (slow/big phones, mid-range, fast tablets with bigger
+models) is planned two ways:
+
+* ``hetero/blind``      — the planner prices every device with the
+  homogeneous constants (tier multipliers stripped to 1.0, compression
+  off) and its assignment is then DEPLOYED on the real tiered fleet: the
+  mispricing surfaces as extra weighted cost at re-pricing time.
+* ``hetero/aware``      — the engine searches with each user's true
+  per-tier compute/upload constants (D11), compression still off.
+* ``hetero/aware_comp`` — tier-aware AND the none/int8/top-k compression
+  ladder as a joint per-user decision variable.
+
+All three deploys are priced on the SAME true tiered constants, so sum R
+is directly comparable.  The suite asserts the ISSUE 9 acceptance: the
+tier-aware plan strictly beats the tier-blind plan on total system cost,
+and compression only improves it further.
+
+The second half couples the plan to training: one tiered cell is planned
+blind vs aware+compression, and the SAME HFL run (synthetic
+fashion-MNIST CNN) is clocked with each plan's per-global-iteration
+latency t* — wall-clock-to-accuracy is the figure the paper optimizes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timed
+
+TIERS = None  # built lazily (repro imports inside run() keep --only cheap)
+CELLS = 6
+LAM = 1.0
+
+
+def _tiers():
+    from repro.core.wireless import DeviceTier
+    return (
+        DeviceTier("lo", cycle_mult=1.6, size_mult=1.0, f_scale=0.55,
+                   prob=0.35),
+        DeviceTier("mid"),
+        DeviceTier("hi", cycle_mult=0.7, size_mult=1.2, f_scale=1.5,
+                   prob=0.30),
+    )
+
+
+def _sum_R(fleet, assigns, cfg, comps=None, ladder=None) -> float:
+    """Deploy (assign, comp) on the TRUE tiered fleet and total eq-15."""
+    from repro.fleet import batch as fbatch
+    res = fbatch.solve_batch(fleet, jnp.asarray(assigns, jnp.int32), LAM,
+                             cfg, comps, ladder)
+    return float(np.asarray(res.R).sum())
+
+
+def _plan_rows():
+    from repro.core import sroa
+    from repro.core.wireless import ScenarioSpec
+    from repro.fed.compression import default_ladder
+    from repro.fleet import batch as fbatch
+    from repro.fleet import engine as fengine
+
+    spec = ScenarioSpec(N=8, M=3, tiers=_tiers())
+    fleet = fbatch.draw_fleet(0, CELLS, spec, n_range=(8, 8))
+    cfg = sroa.SroaConfig(b_iters=20, f_iters=14, p_iters=10, t_iters=14)
+    ladder = default_ladder()
+
+    # Tier-blind: the engine searches on a fleet whose tier multipliers are
+    # flattened to 1.0 (f_max stays — the hardware cap is observable even
+    # to a blind planner; it is the LOAD constants it misprices).
+    ones = jnp.ones_like(fleet.cells.cycle_mult)
+    blind_fleet = fleet._replace(cells=fleet.cells._replace(
+        cycle_mult=ones, size_mult=ones))
+    out_b, us_b = timed(fengine.solve_fleet_assignments, blind_fleet,
+                        lam=LAM, cfg=cfg, max_rounds=12, escape_iters=2)
+    R_blind = _sum_R(fleet, np.asarray(out_b.assign), cfg)
+
+    out_a, us_a = timed(fengine.solve_fleet_assignments, fleet, lam=LAM,
+                        cfg=cfg, max_rounds=12, escape_iters=2)
+    R_aware = _sum_R(fleet, np.asarray(out_a.assign), cfg)
+
+    out_c, us_c = timed(fengine.solve_fleet_assignments, fleet, lam=LAM,
+                        cfg=cfg, max_rounds=12, escape_iters=2,
+                        ladder=ladder)
+    comps = np.asarray(out_c.comp)
+    R_comp = _sum_R(fleet, np.asarray(out_c.assign), cfg,
+                    jnp.asarray(comps), ladder)
+    mix = {int(lv): int(n) for lv, n in
+           zip(*np.unique(comps[np.asarray(fleet.mask)],
+                          return_counts=True))}
+
+    yield row("hetero/blind", us_b, f"sum_R={R_blind:.1f};cells={CELLS}")
+    yield row("hetero/aware", us_a, f"sum_R={R_aware:.1f};cells={CELLS}")
+    yield row("hetero/aware_comp", us_c,
+              f"sum_R={R_comp:.1f};comp_mix={mix}")
+    saved = R_blind - R_comp
+    yield row("hetero/summary", 0.0,
+              f"saved={saved:.1f};"
+              f"aware_gain={R_blind - R_aware:.1f};"
+              f"comp_gain={R_aware - R_comp:.1f}")
+    # ISSUE 9 acceptance: pricing the true per-tier constants must
+    # strictly lower the deployed total cost, and the compression ladder
+    # can only lower it further (level 0 is always available).
+    assert R_aware < R_blind, (
+        f"tier-aware plan must beat tier-blind: {R_aware:.1f} >= "
+        f"{R_blind:.1f}")
+    assert R_comp <= R_aware + 1e-3, (
+        f"compression must not hurt: {R_comp:.1f} > {R_aware:.1f}")
+    assert R_comp < R_blind, (
+        f"tier-aware+comp must beat tier-blind: {R_comp:.1f} >= "
+        f"{R_blind:.1f}")
+
+
+def _hfl_rows(I=6):
+    """Wall-clock-to-accuracy: the same HFL run under each plan's clock.
+
+    The plan sets the wireless round length t* (SROA deadline, eq 10-14);
+    the training curve sets accuracy per global iteration.  A compressed
+    uplink (the aware plan's modal level) trains on lossier updates but
+    pays far less airtime per round — wall clock to the target accuracy
+    is what the joint plan actually buys.
+
+    The training-coupled half plans on a 2-rung none/int8 ladder: the
+    training loop compresses each upload statelessly (no cross-round
+    error feedback), which int8 survives near-losslessly but aggressive
+    top-k does not — the plan must only promise a wire the trainer can
+    actually ride.
+    """
+    import dataclasses as dc
+
+    from repro.core import sroa
+    from repro.core.wireless import ScenarioSpec, draw_scenario
+    from repro.fed.compression import (CompressionLadder, CompressionLevel,
+                                       _bytes_factor)
+    from repro.fed.hfl import HflConfig, run_hfl
+    from repro.fleet import incremental
+    from repro.data import make_dataset, partition_to_users
+    from repro.data.synthetic import DATASET_SHAPES
+    from repro.models import cnn
+
+    spec = ScenarioSpec(N=12, M=3, tiers=_tiers())
+    scn = draw_scenario(0, spec)
+    cfg = sroa.SroaConfig(b_iters=20, f_iters=14, p_iters=10, t_iters=14)
+    ladder = CompressionLadder(levels=(
+        CompressionLevel("none", 1.0, 1.0),
+        CompressionLevel("int8", _bytes_factor(None, True), 1.05)))
+
+    blind = scn._replace(cycle_mult=jnp.ones_like(scn.cycle_mult),
+                         size_mult=jnp.ones_like(scn.size_mult))
+    res_b = incremental.solve(blind, LAM, cfg, max_rounds=12,
+                              escape_iters=2)
+    # deploy the blind assignment on the true tiered cell
+    alloc_b = sroa.solve(scn, res_b.assign, LAM, cfg)
+    res_a = incremental.solve(scn, LAM, cfg, max_rounds=12, escape_iters=2,
+                              ladder=ladder)
+    alloc_a = sroa.solve(scn, res_a.assign, LAM, cfg,
+                         comp=res_a.comp, ladder=ladder)
+    t_blind, t_aware = float(alloc_b.t), float(alloc_a.t)
+
+    ds = make_dataset("fashionmnist", n_train=1500, n_test=300,
+                      shape=DATASET_SHAPES["fashionmnist"], seed=0)
+    rng = np.random.default_rng(0)
+    sizes = rng.integers(50, 80, size=spec.N)
+    x_u, y_u, mask, sizes = partition_to_users(ds.x_train, ds.y_train,
+                                               sizes)
+    ccfg = cnn.PAPER_CNNS["fashionmnist"]
+    w0 = cnn.init_params(ccfg, jax.random.PRNGKey(0))
+    base = HflConfig(L=2, K=2, I=I, lr=0.1)
+    # the aware plan's modal compression level sets the training-side wire
+    lv = int(np.bincount(np.asarray(res_a.comp)).argmax())
+    comp_cfg = base if lv == 0 else dc.replace(base, int8=True)
+    _, hist_b = run_hfl(ccfg, w0, x_u, y_u, mask, sizes,
+                        np.asarray(res_b.assign), base,
+                        x_test=ds.x_test, y_test=ds.y_test)
+    _, hist_a = run_hfl(ccfg, w0, x_u, y_u, mask, sizes,
+                        np.asarray(res_a.assign), comp_cfg,
+                        x_test=ds.x_test, y_test=ds.y_test)
+    target = 0.95 * min(hist_b["acc"][-1], hist_a["acc"][-1])
+
+    def wall_to(hist, t_round):
+        for it, acc in zip(hist["iter"], hist["acc"]):
+            if acc >= target:
+                return (it + 1) * t_round
+        return (hist["iter"][-1] + 1) * t_round
+
+    wb, wa = wall_to(hist_b, t_blind), wall_to(hist_a, t_aware)
+    yield row("hetero/hfl_blind", 0.0,
+              f"t_round={t_blind:.2f};acc={hist_b['acc'][-1]:.3f};"
+              f"wall_to_acc={wb:.2f}")
+    yield row("hetero/hfl_aware", 0.0,
+              f"t_round={t_aware:.2f};acc={hist_a['acc'][-1]:.3f};"
+              f"wall_to_acc={wa:.2f};comp_level={lv}")
+    yield row("hetero/hfl_summary", 0.0,
+              f"target_acc={target:.3f};speedup={wb / max(wa, 1e-9):.2f}x")
+    assert wa < wb, (
+        f"tier-aware plan must reach target accuracy in less wall clock: "
+        f"{wa:.2f}s >= {wb:.2f}s")
+
+
+def run():
+    yield from _plan_rows()
+    yield from _hfl_rows()
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for line in run():
+        print(line)

@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   engine — device-resident assignment engine       [bench_engine]
   serve — streaming control plane under load       [bench_serve]
   horizon — rolling-horizon (MPC) vs snapshot      [bench_horizon]
+  hetero — device tiers + compression vs blind     [bench_hetero]
 
 ``--json PATH`` additionally writes every row as structured JSON — with
 run metadata (git rev, jax version, backend/device, timestamp) — so
@@ -93,13 +94,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: sroa,lambda,tsia,convergence,"
-                         "hfl_vs_fl,roofline,fleet,engine,serve,horizon")
+                         "hfl_vs_fl,roofline,fleet,engine,serve,horizon,"
+                         "hetero")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as JSON to PATH")
     args = ap.parse_args()
     from benchmarks import (bench_convergence, bench_engine, bench_fleet,
-                            bench_hfl_vs_fl, bench_horizon, bench_lambda,
-                            bench_serve, bench_sroa, bench_tsia, roofline)
+                            bench_hetero, bench_hfl_vs_fl, bench_horizon,
+                            bench_lambda, bench_serve, bench_sroa,
+                            bench_tsia, roofline)
     suites = {
         "sroa": bench_sroa.run,
         "lambda": bench_lambda.run,
@@ -111,6 +114,7 @@ def main() -> None:
         "engine": bench_engine.run,
         "serve": bench_serve.run,
         "horizon": bench_horizon.run,
+        "hetero": bench_hetero.run,
     }
     wanted = args.only.split(",") if args.only else list(suites)
     unknown = [w for w in wanted if w not in suites]

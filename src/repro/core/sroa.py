@@ -483,9 +483,14 @@ solve_constants.__doc__ = "Jitted :func:`solve_constants_impl`."
 
 
 def solve(scn: Scenario, assign: jnp.ndarray, lam,
-          cfg: SroaConfig = SroaConfig()) -> SroaResult:
-    """SROA for one assignment pattern: the paper's `Algorithm 4` end-to-end."""
-    consts = sroa_constants(scn, assign)
+          cfg: SroaConfig = SroaConfig(),
+          comp: jnp.ndarray | None = None, ladder=None) -> SroaResult:
+    """SROA for one assignment pattern: the paper's `Algorithm 4` end-to-end.
+
+    ``comp``/``ladder`` (D11) price a fixed per-user compression choice
+    into the constants; None keeps the literal paper model.
+    """
+    consts = sroa_constants(scn, assign, comp=comp, ladder=ladder)
     B = scn.B_total
     return solve_constants(consts, B, B, scn.f_max, scn.p_max, scn.N0,
                            jnp.asarray(lam, jnp.float32), cfg)

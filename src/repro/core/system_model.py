@@ -16,6 +16,28 @@ from repro.core.wireless import Scenario
 _BIG = 1e30
 
 
+def effective_loads(scn: Scenario, comp: jnp.ndarray | None = None,
+                    ladder=None):
+    """Per-user effective (cycles/sample, upload bits) under tiers + comp.
+
+    Returns ``(c_eff, s_bits_eff)`` — the D11 heterogeneity contract: tier
+    multipliers always apply (all-ones is bitwise the homogeneous model
+    since ``x * 1.0`` is exact), and when a per-user compression level
+    ``comp`` (N,) plus a :class:`repro.fed.compression.CompressionLadder`
+    are given, the ladder's epoch factor scales compute and its bytes
+    factor scales the upload.
+    """
+    c_eff = scn.c * scn.cycle_mult
+    s_eff = scn.s_bits * scn.size_mult
+    if comp is not None and ladder is not None:
+        ef = jnp.asarray(ladder.epoch_factors(), jnp.float32)
+        bf = jnp.asarray(ladder.bytes_factors(), jnp.float32)
+        lv = jnp.clip(comp, 0, len(ladder) - 1)
+        c_eff = c_eff * ef[lv]
+        s_eff = s_eff * bf[lv]
+    return c_eff, s_eff
+
+
 def rate(b: jnp.ndarray, gain: jnp.ndarray, p: jnp.ndarray, N0) -> jnp.ndarray:
     """Achievable FDMA rate (eq 6): r = b log2(1 + g p / (N0 b)).
 
@@ -49,7 +71,9 @@ def members(assign: jnp.ndarray, M: int) -> jnp.ndarray:
 
 def evaluate(scn: Scenario, assign: jnp.ndarray, b: jnp.ndarray,
              f: jnp.ndarray, p: jnp.ndarray, lam,
-             mask: jnp.ndarray | None = None) -> CostBreakdown:
+             mask: jnp.ndarray | None = None,
+             comp: jnp.ndarray | None = None,
+             ladder=None) -> CostBreakdown:
     """Evaluate the full paper cost model for one configuration.
 
     Args:
@@ -61,18 +85,23 @@ def evaluate(scn: Scenario, assign: jnp.ndarray, b: jnp.ndarray,
       lam:    importance weight lambda in eq (15).
       mask:   optional (N,) bool; False = inactive/padded user, excluded
               from every aggregate (delays, energies, edge occupancy).
+      comp:   optional (N,) int32 per-user compression level; priced via
+              ``ladder`` (a CompressionLadder): upload bits shrink by the
+              level's bytes factor, compute grows by its epoch factor.
+      ladder: CompressionLadder giving comp meaning; None disables it.
     """
     psi = members(assign, scn.M)                       # (N, M)
     if mask is not None:
         psi = psi * mask.astype(psi.dtype)[:, None]
     gain_n = jnp.sum(psi * scn.gain, axis=1)           # h_n: gain to own edge
 
+    c_eff, s_eff = effective_loads(scn, comp, ladder)
     f_safe = jnp.maximum(f, 1.0)
-    T_cmp = scn.L * scn.c * scn.D / f_safe                         # eq (4)
-    E_cmp = 0.5 * scn.alpha * scn.L * f ** 2 * scn.c * scn.D       # eq (5)
+    T_cmp = scn.L * c_eff * scn.D / f_safe                         # eq (4)
+    E_cmp = 0.5 * scn.alpha * scn.L * f ** 2 * c_eff * scn.D       # eq (5)
 
     r = rate(b, gain_n, p, scn.N0)                                  # eq (6)
-    T_com = jnp.where(r > 0, scn.s_bits / jnp.maximum(r, 1e-9), _BIG)  # eq (7)
+    T_com = jnp.where(r > 0, s_eff / jnp.maximum(r, 1e-9), _BIG)    # eq (7)
     E_com = p * T_com                                               # eq (8)
 
     per_user = T_cmp + T_com                           # (N,)
@@ -107,22 +136,30 @@ def objective(scn: Scenario, assign, b, f, p, lam) -> jnp.ndarray:
 
 def evaluate_candidates(scn: Scenario, assigns: jnp.ndarray, b: jnp.ndarray,
                         f: jnp.ndarray, p: jnp.ndarray, lam,
-                        mask: jnp.ndarray | None = None) -> CostBreakdown:
+                        mask: jnp.ndarray | None = None,
+                        comps: jnp.ndarray | None = None,
+                        ladder=None) -> CostBreakdown:
     """Candidate-axis batched :func:`evaluate` for ONE scenario.
 
     Args:
       assigns:  (A, N) int32 — A candidate assignment patterns.
       b, f, p:  (A, N) per-candidate allocations.
       mask:     optional (N,) bool shared by every candidate.
+      comps:    optional (A, N) int32 per-candidate compression levels
+                (priced via ``ladder``, see :func:`evaluate`).
     Returns:
       CostBreakdown whose leaves carry a leading (A,) axis.  This is the
       scoring half of the device-resident assignment engine: all A
       patterns are valued in one traced computation, with the shared
       scenario and mask closed over instead of broadcast.
     """
-    fn = lambda a, b_, f_, p_: evaluate(scn, a, b_, f_, p_, lam,  # noqa: E731
-                                        mask)
-    return jax.vmap(fn)(assigns, b, f, p)
+    if comps is None:
+        fn = lambda a, b_, f_, p_: evaluate(scn, a, b_, f_, p_,  # noqa: E731
+                                            lam, mask)
+        return jax.vmap(fn)(assigns, b, f, p)
+    fn = lambda a, b_, f_, p_, cp: evaluate(scn, a, b_, f_, p_,  # noqa: E731
+                                            lam, mask, cp, ladder)
+    return jax.vmap(fn)(assigns, b, f, p, comps)
 
 
 class SroaConstants(NamedTuple):
@@ -137,7 +174,9 @@ class SroaConstants(NamedTuple):
 
 
 def sroa_constants(scn: Scenario, assign: jnp.ndarray,
-                   mask: jnp.ndarray | None = None) -> SroaConstants:
+                   mask: jnp.ndarray | None = None,
+                   comp: jnp.ndarray | None = None,
+                   ladder=None) -> SroaConstants:
     psi = members(assign, scn.M)
     if mask is not None:
         psi = psi * mask.astype(psi.dtype)[:, None]
@@ -145,10 +184,11 @@ def sroa_constants(scn: Scenario, assign: jnp.ndarray,
     occupied = psi.sum(axis=0) > 0
     T_cloud = jnp.where(occupied, scn.T_cloud(), 0.0)
     E_cloud = jnp.where(occupied, scn.E_cloud(), 0.0)
+    c_eff, s_eff = effective_loads(scn, comp, ladder)
     consts = SroaConstants(
-        A=0.5 * scn.alpha * IKL * scn.c * scn.D,
-        J=IKL * scn.c * scn.D,
-        H=jnp.broadcast_to(scn.I * scn.K * scn.s_bits, scn.c.shape),
+        A=0.5 * scn.alpha * IKL * c_eff * scn.D,
+        J=IKL * c_eff * scn.D,
+        H=jnp.broadcast_to(scn.I * scn.K * s_eff, scn.c.shape),
         delta=scn.I * jnp.sum(psi * T_cloud[None, :], axis=1),
         h=jnp.sum(psi * scn.gain, axis=1),
         E_cloud_total=scn.I * jnp.sum(E_cloud),
@@ -159,21 +199,29 @@ def sroa_constants(scn: Scenario, assign: jnp.ndarray,
 
 
 def sroa_constants_batched(scn: Scenario, assigns: jnp.ndarray,
-                           mask: jnp.ndarray | None = None) -> SroaConstants:
+                           mask: jnp.ndarray | None = None,
+                           comps: jnp.ndarray | None = None,
+                           ladder=None) -> SroaConstants:
     """Stacked constants for a batch of candidate assignments.
 
     Args:
       scn:     one wireless scenario.
       assigns: (A, N) int32 — A candidate user->edge assignment patterns.
       mask:    optional (N,) bool shared by all candidates.
+      comps:   optional (A, N) int32 per-candidate compression levels
+               (priced through ``ladder``; see :func:`effective_loads`).
     Returns:
       SroaConstants whose per-user leaves have a leading candidate axis
       (A, N) and whose scalar leaf (E_cloud_total) has shape (A,); feed it
       to :func:`repro.fleet.batch.solve_constants_batch` to score all A
       patterns in one XLA call.
     """
-    fn = lambda a: sroa_constants(scn, a, mask)        # noqa: E731
-    return jax.vmap(fn)(assigns)
+    if comps is None:
+        fn = lambda a: sroa_constants(scn, a, mask)    # noqa: E731
+        return jax.vmap(fn)(assigns)
+    fn = lambda a, cp: sroa_constants(scn, a, mask,    # noqa: E731
+                                      cp, ladder)
+    return jax.vmap(fn)(assigns, comps)
 
 
 def mask_constants(consts: SroaConstants, mask: jnp.ndarray) -> SroaConstants:

@@ -40,9 +40,9 @@ class Scenario(NamedTuple):
     B_edges: jnp.ndarray    # (M,) Hz   per-edge bandwidth budget (draw)
     B_cloud: jnp.ndarray    # (M,) Hz   edge->cloud bandwidth
     p_edge: jnp.ndarray     # (M,) W    edge transmit power
-    c: jnp.ndarray          # (N,) cycles / sample
+    c: jnp.ndarray          # (N,) cycles / sample (tier-neutral base draw)
     D: jnp.ndarray          # (N,) samples in local dataset
-    f_max: jnp.ndarray      # (N,) Hz
+    f_max: jnp.ndarray      # (N,) Hz (tier f_scale already applied)
     p_max: jnp.ndarray      # (N,) W
     s_bits: jnp.ndarray     # () model size in bits
     alpha: jnp.ndarray      # () effective capacitance (the paper's alpha)
@@ -50,6 +50,11 @@ class Scenario(NamedTuple):
     L: jnp.ndarray          # () local iterations per edge iteration
     K: jnp.ndarray          # () edge iterations per global iteration
     I: jnp.ndarray          # () global iterations
+    # Per-user device-tier fields (DESIGN.md D11).  All-ones multipliers
+    # are the homogeneous case and price bitwise like the pre-tier model.
+    tier: jnp.ndarray       # (N,) i32 device-tier index
+    cycle_mult: jnp.ndarray  # (N,) cycles/sample multiplier (c_eff = c*mult)
+    size_mult: jnp.ndarray  # (N,) model-size multiplier (bits_eff = s*mult)
 
     @property
     def N(self) -> int:
@@ -77,6 +82,23 @@ class Scenario(NamedTuple):
 
 
 @dataclasses.dataclass(frozen=True)
+class DeviceTier:
+    """One device class in a heterogeneous fleet (DESIGN.md D11).
+
+    ``cycle_mult`` scales cycles/sample (slower silicon needs more work per
+    sample), ``size_mult`` scales the upload payload (bigger local model),
+    ``f_scale`` scales the CPU frequency cap, and ``prob`` is the draw
+    weight (normalized over the spec's tiers).
+    """
+
+    name: str
+    cycle_mult: float = 1.0
+    size_mult: float = 1.0
+    f_scale: float = 1.0
+    prob: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
 class ScenarioSpec:
     """Knobs for drawing a Scenario (defaults = paper §VI-A, ImageNette)."""
 
@@ -98,6 +120,39 @@ class ScenarioSpec:
     # Edge->cloud link (paper leaves these implicit; see DESIGN.md D4)
     B_cloud_hz: float = 1e6
     p_edge_dbm: float = 27.0
+    # Device tiers (D11).  Empty = homogeneous fleet; each user then gets
+    # tier 0 with unit multipliers and the draw consumes no extra rng.
+    tiers: tuple = ()
+
+    def __post_init__(self):
+        def _positive(name, v):
+            if not v > 0:
+                raise ValueError(f"ScenarioSpec.{name} must be > 0, got {v}")
+        _positive("N", self.N)
+        _positive("M", self.M)
+        _positive("side_m", self.side_m)
+        _positive("f_max_hz", self.f_max_hz)
+        _positive("s_bytes", self.s_bytes)
+        _positive("alpha", self.alpha)
+        _positive("L", self.L)
+        _positive("K", self.K)
+        _positive("I", self.I)
+        _positive("B_cloud_hz", self.B_cloud_hz)
+        for name in ("B_edge_range_hz", "c_range", "D_range"):
+            lo, hi = getattr(self, name)
+            if not (0 < lo <= hi):
+                raise ValueError(
+                    f"ScenarioSpec.{name} must satisfy 0 < lo <= hi, "
+                    f"got ({lo}, {hi})")
+        for t in self.tiers:
+            if not isinstance(t, DeviceTier):
+                raise ValueError(f"ScenarioSpec.tiers entries must be "
+                                 f"DeviceTier, got {type(t).__name__}")
+            for fname in ("cycle_mult", "size_mult", "f_scale", "prob"):
+                if not getattr(t, fname) > 0:
+                    raise ValueError(
+                        f"DeviceTier {t.name!r}: {fname} must be > 0, "
+                        f"got {getattr(t, fname)}")
 
 
 def draw_scenario(seed: int, spec: ScenarioSpec = ScenarioSpec()) -> Scenario:
@@ -122,6 +177,20 @@ def draw_scenario(seed: int, spec: ScenarioSpec = ScenarioSpec()) -> Scenario:
     c = rng.uniform(*spec.c_range, size=spec.N)
     D = rng.uniform(spec.D_range[0], spec.D_range[1], size=spec.N)
 
+    # Tier draw comes AFTER every legacy draw so homogeneous specs consume
+    # the exact same rng stream as before tiers existed (bitwise traces).
+    f_max = np.full(spec.N, spec.f_max_hz)
+    tier = np.zeros(spec.N, dtype=np.int32)
+    cycle_mult = np.ones(spec.N)
+    size_mult = np.ones(spec.N)
+    if spec.tiers:
+        probs = np.array([t.prob for t in spec.tiers], dtype=np.float64)
+        tier = rng.choice(len(spec.tiers), size=spec.N,
+                          p=probs / probs.sum()).astype(np.int32)
+        cycle_mult = np.array([t.cycle_mult for t in spec.tiers])[tier]
+        size_mult = np.array([t.size_mult for t in spec.tiers])[tier]
+        f_max = f_max * np.array([t.f_scale for t in spec.tiers])[tier]
+
     f = jnp.asarray
     return Scenario(
         user_pos=f(user_pos, dtype=jnp.float32),
@@ -133,7 +202,7 @@ def draw_scenario(seed: int, spec: ScenarioSpec = ScenarioSpec()) -> Scenario:
         p_edge=f(np.full(spec.M, dbm_to_watt(spec.p_edge_dbm)), dtype=jnp.float32),
         c=f(c, dtype=jnp.float32),
         D=f(D, dtype=jnp.float32),
-        f_max=f(np.full(spec.N, spec.f_max_hz), dtype=jnp.float32),
+        f_max=f(f_max, dtype=jnp.float32),
         p_max=f(np.full(spec.N, dbm_to_watt(spec.p_max_dbm)), dtype=jnp.float32),
         s_bits=f(spec.s_bytes * 8.0, dtype=jnp.float32),
         alpha=f(spec.alpha, dtype=jnp.float32),
@@ -141,7 +210,38 @@ def draw_scenario(seed: int, spec: ScenarioSpec = ScenarioSpec()) -> Scenario:
         L=f(float(spec.L), dtype=jnp.float32),
         K=f(float(spec.K), dtype=jnp.float32),
         I=f(float(spec.I), dtype=jnp.float32),
+        tier=f(tier, dtype=jnp.int32),
+        cycle_mult=f(cycle_mult, dtype=jnp.float32),
+        size_mult=f(size_mult, dtype=jnp.float32),
     )
+
+
+def validate_scenario(scn: Scenario) -> None:
+    """Shape/sign sanity checks for hand-built scenarios.
+
+    ``draw_scenario`` output is valid by construction; this guards scenarios
+    assembled by hand or mutated via ``_replace`` before they hit a solver.
+    """
+    n, m = scn.N, scn.M
+    per_user = {"gain": (scn.gain, (n, m)), "c": (scn.c, (n,)),
+                "D": (scn.D, (n,)), "f_max": (scn.f_max, (n,)),
+                "p_max": (scn.p_max, (n,)), "tier": (scn.tier, (n,)),
+                "cycle_mult": (scn.cycle_mult, (n,)),
+                "size_mult": (scn.size_mult, (n,))}
+    per_edge = {"B_edges": (scn.B_edges, (m,)), "B_cloud": (scn.B_cloud, (m,)),
+                "p_edge": (scn.p_edge, (m,)), "gain_cloud": (scn.gain_cloud, (m,))}
+    for name, (arr, shape) in {**per_user, **per_edge}.items():
+        if tuple(arr.shape) != shape:
+            raise ValueError(f"Scenario.{name} has shape {tuple(arr.shape)}, "
+                             f"expected {shape} for N={n}, M={m}")
+    for name in ("f_max", "p_max", "c", "D", "B_edges", "cycle_mult",
+                 "size_mult"):
+        if bool(jnp.any(getattr(scn, name) <= 0)):
+            raise ValueError(f"Scenario.{name} must be strictly positive")
+    for name in ("s_bits", "alpha", "N0", "L", "K", "I"):
+        if not float(getattr(scn, name)) > 0:
+            raise ValueError(f"Scenario.{name} must be > 0, "
+                             f"got {float(getattr(scn, name))}")
 
 
 def nearest_edge_assignment(scn: Scenario) -> jnp.ndarray:

@@ -28,9 +28,30 @@ class HflConfig:
     K: int = 5                   # edge iterations per global iteration
     I: int = 40                  # global iterations
     lr: float = 0.05
-    topk_frac: Optional[float] = None    # uplink compression
+    topk_frac: Optional[float] = None    # uplink compression (None = off)
     int8: bool = False
     seed: int = 0
+
+
+def _compress_update(cfg: HflConfig, upd):
+    """Lossy-compress one user's uplink update per the config.
+
+    Simulates the wire: top-k sparsification then int8
+    quantize/dequantize, so the aggregated model sees exactly what a
+    compressed upload would deliver.  Both knobs off returns the update
+    untouched (the literal uncompressed program).
+    """
+    if cfg.topk_frac is not None:
+        def keep(u):
+            flat = u.reshape(-1)
+            k = max(1, int(np.ceil(flat.size * cfg.topk_frac)))
+            thresh = jnp.sort(jnp.abs(flat))[-k]
+            return u * (jnp.abs(u) >= thresh).astype(u.dtype)
+        upd = jax.tree.map(keep, upd)
+    if cfg.int8:
+        q, scales = comp_lib.int8_quantize(upd)
+        upd = comp_lib.int8_dequantize(q, scales)
+    return upd
 
 
 def broadcast_tree(tree, n):
@@ -77,6 +98,12 @@ def global_iteration(cnn_cfg: cnn.CnnConfig, cfg: HflConfig, w_global,
 
     def edge_iter(user_params, _):
         trained = jax.vmap(local_train)(user_params, x_u, y_u, mask_u)
+        if cfg.topk_frac is not None or cfg.int8:
+            # Compress the user -> edge uplink: the edge aggregates the
+            # broadcast reference plus each user's compressed update.
+            upd = jax.tree.map(lambda a, b: a - b, trained, user_params)
+            upd = jax.vmap(lambda u: _compress_update(cfg, u))(upd)
+            trained = jax.tree.map(lambda b, u: b + u, user_params, upd)
         edge_params, _ = weighted_edge_average(trained, onehot, weights)
         # edge broadcasts back to its users (start of next edge iteration)
         user_params = jax.tree.map(

@@ -35,7 +35,8 @@ from repro.core.wireless import (Scenario, ScenarioSpec, draw_scenario,
 
 # Scenario fields carrying a leading user axis (everything else is per-edge
 # or scalar and stacks as-is).
-_PER_USER_FIELDS = ("user_pos", "gain", "c", "D", "f_max", "p_max")
+_PER_USER_FIELDS = ("user_pos", "gain", "c", "D", "f_max", "p_max",
+                    "tier", "cycle_mult", "size_mult")
 
 
 class FleetScenario(NamedTuple):
@@ -135,10 +136,21 @@ def fleet_assignments(fleet: FleetScenario) -> jnp.ndarray:
     return jax.vmap(nearest_edge_assignment)(fleet.cells)
 
 
-def fleet_constants(fleet: FleetScenario,
-                    assigns: jnp.ndarray) -> SroaConstants:
-    """Masked, per-cell SROA constants with a leading (C,) axis."""
-    return jax.vmap(sroa_constants)(fleet.cells, assigns, fleet.mask)
+def fleet_constants(fleet: FleetScenario, assigns: jnp.ndarray,
+                    comps: jnp.ndarray | None = None,
+                    ladder=None) -> SroaConstants:
+    """Masked, per-cell SROA constants with a leading (C,) axis.
+
+    ``comps`` (C, N_max) with a ``ladder`` prices each user's chosen
+    compression level into the constants (D11); None keeps the literal
+    uncompressed pricing.
+    """
+    if comps is None:
+        return jax.vmap(sroa_constants)(fleet.cells, assigns, fleet.mask)
+    fn = lambda s, a, m, cp: sroa_constants(s, a, m, cp,     # noqa: E731
+                                            ladder)
+    return jax.vmap(fn)(fleet.cells, assigns, fleet.mask,
+                        jnp.asarray(comps, jnp.int32))
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -157,7 +169,8 @@ def solve_constants_batch(consts: SroaConstants, B, b_max, f_max, p_max, N0,
 
 
 def solve_batch(fleet: FleetScenario, assigns: jnp.ndarray | None = None,
-                lam=1.0, cfg: sroa.SroaConfig = sroa.SroaConfig()
+                lam=1.0, cfg: sroa.SroaConfig = sroa.SroaConfig(),
+                comps: jnp.ndarray | None = None, ladder=None
                 ) -> sroa.SroaResult:
     """Batched SROA for a whole fleet: C scenarios solved in one jitted call.
 
@@ -165,13 +178,15 @@ def solve_batch(fleet: FleetScenario, assigns: jnp.ndarray | None = None,
       fleet:   stacked cells.
       assigns: (C, N_max) int32 per-cell assignments (nearest-edge default).
       lam:     scalar or (C,) objective weight(s).
+      comps:   optional (C, N_max) int32 per-user compression levels,
+               priced through ``ladder`` (D11).
     Returns:
       SroaResult with leading (C,) axes; entries of padded users carry
       ~zero bandwidth and are ignored by downstream aggregates.
     """
     if assigns is None:
         assigns = fleet_assignments(fleet)
-    consts = fleet_constants(fleet, assigns)
+    consts = fleet_constants(fleet, assigns, comps, ladder)
     B = jnp.sum(fleet.cells.B_edges, axis=-1)
     lam_v = jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (fleet.C,))
     return solve_constants_batch(consts, B, B, fleet.cells.f_max,

@@ -31,6 +31,17 @@ import numpy as np
 from repro.core.wireless import Scenario, ScenarioSpec, path_loss_db
 
 
+def _tier_probs(spec: ScenarioSpec) -> np.ndarray:
+    p = np.array([t.prob for t in spec.tiers], np.float64)
+    return p / p.sum()
+
+
+def _draw_tier(rng: np.random.Generator, spec: ScenarioSpec,
+               probs: np.ndarray) -> tuple[int, "object"]:
+    ti = int(rng.choice(len(spec.tiers), p=probs))
+    return ti, spec.tiers[ti]
+
+
 class DynamicsState(NamedTuple):
     """Host-side latent state the Scenario pytree does not carry."""
 
@@ -136,12 +147,19 @@ def churn_step(scn: Scenario, state: DynamicsState,
     number of free slots are dropped and reported.
     """
     spec = spec or ScenarioSpec()
+    tiered = bool(spec.tiers)
     active = state.active.copy()
     vel = state.velocity.copy()
     shadow = state.shadow_ue_db.copy()
     pos = np.asarray(scn.user_pos, np.float64).copy()
     c = np.asarray(scn.c, np.float64).copy()
     D = np.asarray(scn.D, np.float64).copy()
+    if tiered:
+        probs = _tier_probs(spec)
+        tier = np.asarray(scn.tier, np.int32).copy()
+        cyc = np.asarray(scn.cycle_mult, np.float64).copy()
+        siz = np.asarray(scn.size_mult, np.float64).copy()
+        f_max = np.asarray(scn.f_max, np.float64).copy()
 
     leave_p = 1.0 - np.exp(-departure_rate * dt)
     departing = np.flatnonzero(active & (rng.uniform(size=active.shape)
@@ -159,12 +177,23 @@ def churn_step(scn: Scenario, state: DynamicsState,
         D[slot] = rng.uniform(spec.D_range[0], spec.D_range[1])
         shadow[slot] = rng.normal(0.0, spec.shadow_std_db, size=scn.M)
         vel[slot] = rng.normal(0.0, mean_speed / np.sqrt(2.0), size=2)
+        if tiered:
+            # Tier draw comes LAST so homogeneous specs consume the
+            # identical rng stream they always did (bitwise traces).
+            ti, t = _draw_tier(rng, spec, probs)
+            tier[slot], cyc[slot], siz[slot] = ti, t.cycle_mult, t.size_mult
+            f_max[slot] = spec.f_max_hz * t.f_scale
 
     gain = _gains(pos, np.asarray(scn.edge_pos), shadow)
     scn2 = scn._replace(user_pos=jnp.asarray(pos, jnp.float32),
                         gain=jnp.asarray(gain, jnp.float32),
                         c=jnp.asarray(c, jnp.float32),
                         D=jnp.asarray(D, jnp.float32))
+    if tiered:
+        scn2 = scn2._replace(tier=jnp.asarray(tier, jnp.int32),
+                             cycle_mult=jnp.asarray(cyc, jnp.float32),
+                             size_mult=jnp.asarray(siz, jnp.float32),
+                             f_max=jnp.asarray(f_max, jnp.float32))
     state2 = DynamicsState(velocity=vel, shadow_ue_db=shadow, active=active,
                            t=state.t + dt)
     return scn2, state2, ChurnEvents(departed=departing, arrived=take,
@@ -269,9 +298,16 @@ def fleet_step(fleet, state: FleetDynamicsState, rng: np.random.Generator,
               if faded else state.shadow_ue_db.copy())
 
     # Churn: vectorized departures, per-slot arrival redraws (rare events).
+    tiered = bool(spec.tiers)
     active = state.active.copy()
     c = np.asarray(fleet.cells.c, np.float64).copy()
     D = np.asarray(fleet.cells.D, np.float64).copy()
+    if tiered:
+        probs = _tier_probs(spec)
+        tier = np.asarray(fleet.cells.tier, np.int32).copy()
+        cyc = np.asarray(fleet.cells.cycle_mult, np.float64).copy()
+        siz = np.asarray(fleet.cells.size_mult, np.float64).copy()
+        f_max = np.asarray(fleet.cells.f_max, np.float64).copy()
     leave_p = 1.0 - np.exp(-cfg.departure_rate * cfg.dt)
     departed = (active & (rng.uniform(size=(C, N)) < leave_p)
                 & cm[:, None])
@@ -292,6 +328,13 @@ def fleet_step(fleet, state: FleetDynamicsState, rng: np.random.Generator,
             shadow[i, slot] = rng.normal(0.0, spec.shadow_std_db, size=M)
             vel[i, slot] = rng.normal(0.0, cfg.mean_speed / np.sqrt(2.0),
                                       size=2)
+            if tiered:
+                # Last in the slot's draw order — homogeneous specs keep
+                # their exact legacy rng stream (trace determinism).
+                ti, t = _draw_tier(rng, spec, probs)
+                tier[i, slot] = ti
+                cyc[i, slot], siz[i, slot] = t.cycle_mult, t.size_mult
+                f_max[i, slot] = spec.f_max_hz * t.f_scale
 
     changed = cm | arrived.any(axis=1) | departed.any(axis=1)
     gain = _fleet_gains(pos, edge_pos, shadow)
@@ -306,6 +349,11 @@ def fleet_step(fleet, state: FleetDynamicsState, rng: np.random.Generator,
         gain=jnp.asarray(gain, jnp.float32),
         c=jnp.asarray(c, jnp.float32),
         D=jnp.asarray(D, jnp.float32))
+    if tiered:
+        cells = cells._replace(tier=jnp.asarray(tier, jnp.int32),
+                               cycle_mult=jnp.asarray(cyc, jnp.float32),
+                               size_mult=jnp.asarray(siz, jnp.float32),
+                               f_max=jnp.asarray(f_max, jnp.float32))
     fleet2 = fleet._replace(cells=cells, mask=jnp.asarray(active),
                             n_users=jnp.asarray(active.sum(axis=1),
                                                 jnp.int32))

@@ -44,6 +44,13 @@ _BIG = 1e30
 # Move-kind codes in EngineTrace.moves[:, 3].
 KIND_DESCENT = 0
 KIND_ESCAPE = 1
+KIND_COMP = 2       # compression-level change (src/dst = old/new level)
+
+
+def _comp_enabled(ladder) -> bool:
+    """A ladder with >= 2 rungs makes compression a decision variable;
+    None or a single-rung ladder keeps the literal pre-D11 program."""
+    return ladder is not None and len(ladder) >= 2
 
 
 class EngineTrace(NamedTuple):
@@ -75,6 +82,8 @@ class EngineResult(NamedTuple):
     #                              to ``R`` for snapshot searches, the
     #                              time-expanded sum + switching cost for
     #                              horizon searches (DESIGN.md D10)
+    comp: jnp.ndarray       # (N,) i32 per-user compression level chosen
+    #                              (all zeros when the ladder is off, D11)
 
 
 class _EngineState(NamedTuple):
@@ -142,6 +151,21 @@ def _topk_moves_nd(k: int):
     return topk_nd
 
 
+def _move_H(scn: Scenario, comp: jnp.ndarray | None = None,
+            ladder=None) -> jnp.ndarray:
+    """(N,) per-user on-wire bits the move-score kernel prices (D11).
+
+    Tier size multipliers always apply (all-ones is bitwise the old scalar
+    broadcast); an active ladder further shrinks each user's payload by
+    the bytes factor of their current compression level.
+    """
+    H = jnp.asarray(scn.s_bits * scn.size_mult, jnp.float32)
+    if comp is not None and ladder is not None:
+        bf = jnp.asarray(ladder.bytes_factors(), jnp.float32)
+        H = H * bf[jnp.clip(comp, 0, len(ladder) - 1)]
+    return H
+
+
 def _pruned_candidates(scn: Scenario, current: jnp.ndarray,
                        mask: jnp.ndarray, top_k: int):
     """The k+1 candidate patterns the move-score kernel nominates.
@@ -152,10 +176,8 @@ def _pruned_candidates(scn: Scenario, current: jnp.ndarray,
     estimate.  Padding rows (score >= _BIG/2: fewer than k valid moves
     existed) are flagged invalid, mirroring ``candidate_assigns_device``.
     """
-    H = jnp.broadcast_to(jnp.asarray(scn.s_bits, jnp.float32),
-                         current.shape)
     user, dst, score = _topk_moves_nd(top_k)(
-        scn.gain, H, scn.p_max, current, mask,
+        scn.gain, _move_H(scn), scn.p_max, current, mask,
         jnp.asarray(scn.N0, jnp.float32),
         jnp.asarray(scn.B_total, jnp.float32))
     rows = jax.vmap(lambda u, d: current.at[u].set(d))(user, dst)
@@ -164,10 +186,76 @@ def _pruned_candidates(scn: Scenario, current: jnp.ndarray,
     return cands, valid
 
 
+def _comp_candidates(current: jnp.ndarray, comp: jnp.ndarray, M: int,
+                     n_levels: int, mask: jnp.ndarray):
+    """Full joint neighbourhood over (assignment, compression) moves.
+
+    Assignment single-moves keep each user's compression level; the extra
+    ``N * (n_levels - 1)`` rows change ONE user's level (cyclically, so
+    every alternative rung is reachable in one move) while the assignment
+    stays put.  Fixed-size like ``candidate_assigns_device`` — masked
+    users' rows are flagged invalid, never dropped.
+    """
+    a_cands, a_valid = candidate_assigns_device(current, M, mask)
+    comps_a = jnp.broadcast_to(comp, a_cands.shape)
+    N = current.shape[0]
+    users = jnp.repeat(jnp.arange(N, dtype=jnp.int32), n_levels - 1)
+    offs = jnp.tile(jnp.arange(1, n_levels, dtype=jnp.int32), N)
+    new_lv = (comp[users] + offs) % n_levels
+    comps_c = jax.vmap(lambda u, lv: comp.at[u].set(lv))(users, new_lv)
+    cands_c = jnp.broadcast_to(current, (N * (n_levels - 1), N))
+    cands = jnp.concatenate([a_cands, cands_c], axis=0)
+    comps = jnp.concatenate([comps_a, comps_c], axis=0)
+    valid = jnp.concatenate([a_valid, mask[users]], axis=0)
+    return cands, comps, valid
+
+
+def _pruned_candidates_comp(scn: Scenario, current: jnp.ndarray,
+                            comp: jnp.ndarray, mask: jnp.ndarray,
+                            top_k: int, ladder):
+    """Kernel-nominated joint (move, compression) candidates: 1 + 5k rows.
+
+    The top-k kernel — fed the comp-aware per-user upload bits — nominates
+    k cheap reassignments; each composes with a compression bump/drop of
+    the moved user, and the same user's bump/drop without moving also
+    enters (so pure compression descents need no reassignment).  Rows
+    whose level leaves the ladder, or whose kernel score is padding, are
+    flagged invalid.
+    """
+    n_levels = len(ladder)
+    user, dst, score = _topk_moves_nd(top_k)(
+        scn.gain, _move_H(scn, comp, ladder), scn.p_max, current, mask,
+        jnp.asarray(scn.N0, jnp.float32),
+        jnp.asarray(scn.B_total, jnp.float32))
+    move_ok = score < _BIG / 2
+    rows = jax.vmap(lambda u, d: current.at[u].set(d))(user, dst)
+    lv = comp[user]
+    bump = jax.vmap(lambda u, l: comp.at[u].set(l))(user, lv + 1)
+    drop = jax.vmap(lambda u, l: comp.at[u].set(l))(user, lv - 1)
+    same = jnp.broadcast_to(current, rows.shape)
+    comp0 = jnp.broadcast_to(comp, rows.shape)
+    bump_ok = (lv + 1 < n_levels) & mask[user]
+    drop_ok = (lv - 1 >= 0) & mask[user]
+    cands = jnp.concatenate([current[None, :], rows, rows, rows,
+                             same, same], axis=0)
+    comps = jnp.concatenate([comp[None, :], comp0, bump, drop,
+                             bump, drop], axis=0)
+    valid = jnp.concatenate([jnp.ones((1,), bool), move_ok,
+                             move_ok & bump_ok, move_ok & drop_ok,
+                             bump_ok, drop_ok], axis=0)
+    return cands, comps, valid
+
+
 def _score_neighbourhood(scn: Scenario, cands: jnp.ndarray,
-                         mask: jnp.ndarray, lam, cfg: sroa.SroaConfig):
-    """Batched SROA + cost model over the candidate axis (one computation)."""
-    consts = sroa_constants_batched(scn, cands, mask)
+                         mask: jnp.ndarray, lam, cfg: sroa.SroaConfig,
+                         comps: jnp.ndarray | None = None, ladder=None):
+    """Batched SROA + cost model over the candidate axis (one computation).
+
+    ``comps`` (A, N) per-candidate compression levels price each row's
+    true compute/comm load through the ladder (D11); None keeps the
+    literal pre-D11 scoring.
+    """
+    consts = sroa_constants_batched(scn, cands, mask, comps, ladder)
     B = scn.B_total
 
     def one(c):
@@ -175,7 +263,8 @@ def _score_neighbourhood(scn: Scenario, cands: jnp.ndarray,
                                          scn.N0, lam, cfg)
 
     res = jax.vmap(one)(consts)
-    ev = evaluate_candidates(scn, cands, res.b, res.f, res.p, lam, mask)
+    ev = evaluate_candidates(scn, cands, res.b, res.f, res.p, lam, mask,
+                             comps, ladder)
     return res, ev
 
 
@@ -195,7 +284,8 @@ def switch_counts(cands: jnp.ndarray, incumbent: jnp.ndarray,
 def _score_horizon(scn: Scenario, gain_stack: jnp.ndarray,
                    cands: jnp.ndarray, mask: jnp.ndarray, lam,
                    cfg: sroa.SroaConfig, incumbent: jnp.ndarray,
-                   switch_cost: float):
+                   switch_cost: float,
+                   comps: jnp.ndarray | None = None, ladder=None):
     """Time-expanded scoring: every candidate against all K predicted slots.
 
     The horizon objective per candidate is
@@ -215,12 +305,12 @@ def _score_horizon(scn: Scenario, gain_stack: jnp.ndarray,
     n_sw = switch_counts(cands, incumbent, mask)
     if K == 1:
         res, ev = _score_neighbourhood(scn._replace(gain=gain_stack[0]),
-                                       cands, mask, lam, cfg)
+                                       cands, mask, lam, cfg, comps, ladder)
         return res, ev, ev.R + switch_cost * n_sw
 
     def one_slot(g):
         return _score_neighbourhood(scn._replace(gain=g), cands, mask,
-                                    lam, cfg)
+                                    lam, cfg, comps, ladder)
 
     res_k, ev_k = jax.vmap(one_slot)(gain_stack)
     res0 = jax.tree.map(lambda x: x[0], res_k)
@@ -233,7 +323,9 @@ def engine_core(scn: Scenario, init_assign: jnp.ndarray, mask: jnp.ndarray,
                 escape_iters: int, top_k: int = 0,
                 gain_stack: jnp.ndarray | None = None,
                 switch_cost: float = 0.0,
-                incumbent: jnp.ndarray | None = None) -> EngineResult:
+                incumbent: jnp.ndarray | None = None,
+                ladder=None,
+                init_comp: jnp.ndarray | None = None) -> EngineResult:
     """The traceable search loop (vmap this for fleets; jit it via
     :func:`solve_assignment`).
 
@@ -252,7 +344,18 @@ def engine_core(scn: Scenario, init_assign: jnp.ndarray, mask: jnp.ndarray,
     loop machinery is untouched — only the per-candidate score widens.
     Move nomination (``top_k``) and the Definition-1/2 escape stay on the
     current (slot-0) channel.  ``incumbent`` defaults to ``init_assign``.
+
+    A ``ladder`` with >= 2 rungs (D11) makes per-user compression a joint
+    decision variable: the search walks (assignment, comp) pairs via
+    :func:`_engine_core_comp`.  None / single-rung dispatches to the
+    literal pre-D11 loop below (``comp`` comes back all-zeros), so the
+    compression-off program — and its outputs — are bitwise unchanged.
     """
+    if _comp_enabled(ladder):
+        return _engine_core_comp(scn, init_assign, mask, lam, cfg,
+                                 max_rounds, escape_iters, top_k,
+                                 gain_stack, switch_cost, incumbent,
+                                 ladder, init_comp)
     N, M = scn.N, scn.M
     T = int(max_rounds)
     lam = jnp.asarray(lam, jnp.float32)
@@ -358,7 +461,165 @@ def engine_core(scn: Scenario, init_assign: jnp.ndarray, mask: jnp.ndarray,
     return EngineResult(assign=st.best_assign, R=ev.R, sroa=res,
                         rounds=st.rounds, escapes=st.escapes,
                         converged=st.converged, trace=st.trace,
-                        R_search=st.best_R if horizon_mode else ev.R)
+                        R_search=st.best_R if horizon_mode else ev.R,
+                        comp=jnp.zeros_like(init))
+
+
+class _EngineStateComp(NamedTuple):
+    current: jnp.ndarray       # (N,) i32 assignment
+    comp: jnp.ndarray          # (N,) i32 compression level per user
+    visited: jnp.ndarray       # (T+1, N) i32 assignments, -1 rows unused
+    visited_comp: jnp.ndarray  # (T+1, N) i32 comp levels of visited rows
+    best_assign: jnp.ndarray   # (N,) i32
+    best_comp: jnp.ndarray     # (N,) i32
+    best_R: jnp.ndarray        # () f32
+    rounds: jnp.ndarray        # () i32
+    escapes: jnp.ndarray       # () i32
+    done: jnp.ndarray          # () bool
+    converged: jnp.ndarray     # () bool
+    trace: EngineTrace
+
+
+def _engine_core_comp(scn: Scenario, init_assign: jnp.ndarray,
+                      mask: jnp.ndarray, lam, cfg: sroa.SroaConfig,
+                      max_rounds: int, escape_iters: int, top_k: int = 0,
+                      gain_stack: jnp.ndarray | None = None,
+                      switch_cost: float = 0.0,
+                      incumbent: jnp.ndarray | None = None,
+                      ladder=None,
+                      init_comp: jnp.ndarray | None = None) -> EngineResult:
+    """Joint (assignment, compression) search loop (D11).
+
+    Same descent/escape/best-ever/Remark-1 machinery as the pre-D11 loop,
+    but the walk state is the PAIR (assignment, comp): candidates couple
+    reassignment with compression bumps/drops (full neighbourhood via
+    :func:`_comp_candidates`, pruned via :func:`_pruned_candidates_comp`),
+    scoring prices each row through the ladder, revisit detection matches
+    on both halves, and the Definition-1/2 escape moves a user while
+    keeping every compression level (the escape is an assignment-space
+    device; comp descents recover on the next rounds).  Trace rows for
+    compression-only moves carry ``KIND_COMP`` with src/dst = old/new
+    level.
+    """
+    N, M = scn.N, scn.M
+    n_levels = len(ladder)
+    T = int(max_rounds)
+    lam = jnp.asarray(lam, jnp.float32)
+    init = jnp.asarray(init_assign, jnp.int32)
+    comp0 = (jnp.zeros_like(init) if init_comp is None
+             else jnp.asarray(init_comp, jnp.int32))
+    mask = jnp.asarray(mask, bool)
+    horizon_mode = gain_stack is not None
+    if horizon_mode:
+        incumbent = init if incumbent is None else jnp.asarray(incumbent,
+                                                               jnp.int32)
+        switch_cost = float(switch_cost)
+
+    def body(st: _EngineStateComp) -> _EngineStateComp:
+        if top_k > 0:
+            cands, comps, valid = _pruned_candidates_comp(
+                scn, st.current, st.comp, mask, top_k, ladder)
+        else:
+            cands, comps, valid = _comp_candidates(
+                st.current, st.comp, M, n_levels, mask)
+        if horizon_mode:
+            res, ev, R_score = _score_horizon(scn, gain_stack, cands, mask,
+                                              lam, cfg, incumbent,
+                                              switch_cost, comps, ladder)
+        else:
+            res, ev = _score_neighbourhood(scn, cands, mask, lam, cfg,
+                                           comps, ladder)
+            R_score = ev.R
+        Rv = jnp.where(valid, R_score, _BIG)
+        j = jnp.argmin(Rv)                 # first minimum; index 0 on ties
+        R0 = Rv[0]
+        improving = Rv[j] < R0
+
+        new_best = Rv[j] < st.best_R
+        best_R = jnp.where(new_best, Rv[j], st.best_R)
+        best_assign = jnp.where(new_best, cands[j], st.best_assign)
+        best_comp = jnp.where(new_best, comps[j], st.best_comp)
+
+        # Decode the move for the trace: the assignment half when the
+        # user moved edges, else the compression half.
+        a_diff = cands[j] != st.current
+        c_diff = comps[j] != st.comp
+        a_moved = jnp.any(a_diff)
+        d_user = jnp.where(a_moved, jnp.argmax(a_diff),
+                           jnp.argmax(c_diff)).astype(jnp.int32)
+        d_src = jnp.where(a_moved, st.current[d_user], st.comp[d_user])
+        d_dst = jnp.where(a_moved, cands[j][d_user], comps[j][d_user])
+        d_kind = jnp.where(a_moved, KIND_DESCENT, KIND_COMP)
+
+        e_user, m_plus, m_minus, e_ok = escape_move(
+            st.current, ev.R_m[0], res.b[0], mask, M)
+        can_escape = (~improving) & e_ok & (st.escapes < escape_iters)
+        esc_assign = st.current.at[e_user].set(m_minus)
+
+        moved = improving | can_escape
+        nxt = jnp.where(improving, cands[j],
+                        jnp.where(can_escape, esc_assign, st.current))
+        nxt_comp = jnp.where(improving, comps[j], st.comp)
+        revisit = moved & jnp.any(
+            jnp.all(st.visited == nxt[None, :], axis=1)
+            & jnp.all(st.visited_comp == nxt_comp[None, :], axis=1))
+        visited = st.visited.at[st.rounds + 1].set(
+            jnp.where(moved, nxt, -1))
+        visited_comp = st.visited_comp.at[st.rounds + 1].set(
+            jnp.where(moved, nxt_comp, -1))
+        done = (~moved) | revisit
+
+        r = st.rounds
+        user = jnp.where(improving, d_user, e_user)
+        src = jnp.where(improving, d_src, m_plus)
+        dst = jnp.where(improving, d_dst, m_minus)
+        kind = jnp.where(improving, d_kind, KIND_ESCAPE)
+        move_row = jnp.stack([user, src, dst, kind,
+                              moved.astype(jnp.int32)]).astype(jnp.int32)
+        trace = EngineTrace(
+            R_best=st.trace.R_best.at[r].set(best_R),
+            R_current=st.trace.R_current.at[r].set(R0),
+            moves=st.trace.moves.at[r].set(move_row),
+            rounds_valid=st.trace.rounds_valid.at[r].set(True))
+
+        return _EngineStateComp(
+            current=nxt, comp=nxt_comp, visited=visited,
+            visited_comp=visited_comp, best_assign=best_assign,
+            best_comp=best_comp, best_R=best_R,
+            rounds=r + jnp.int32(1),
+            escapes=st.escapes + can_escape.astype(jnp.int32),
+            done=done, converged=st.converged | done, trace=trace)
+
+    def cond(st: _EngineStateComp):
+        return (~st.done) & (st.rounds < T)
+
+    trace0 = EngineTrace(
+        R_best=jnp.full((T,), jnp.inf, jnp.float32),
+        R_current=jnp.full((T,), jnp.inf, jnp.float32),
+        moves=jnp.zeros((T, 5), jnp.int32),
+        rounds_valid=jnp.zeros((T,), bool))
+    st0 = _EngineStateComp(
+        current=init, comp=comp0,
+        visited=jnp.full((T + 1, N), -1, jnp.int32).at[0].set(init),
+        visited_comp=jnp.full((T + 1, N), -1, jnp.int32).at[0].set(comp0),
+        best_assign=init, best_comp=comp0,
+        best_R=jnp.asarray(jnp.inf, jnp.float32),
+        rounds=jnp.int32(0), escapes=jnp.int32(0),
+        done=jnp.asarray(False), converged=jnp.asarray(False),
+        trace=trace0)
+    st = lax.while_loop(cond, body, st0) if T > 0 else st0
+
+    B = scn.B_total
+    consts = sroa_constants(scn, st.best_assign, mask, st.best_comp, ladder)
+    res = sroa.solve_constants_impl(consts, B, B, scn.f_max, scn.p_max,
+                                    scn.N0, lam, cfg)
+    ev = evaluate(scn, st.best_assign, res.b, res.f, res.p, lam, mask,
+                  st.best_comp, ladder)
+    return EngineResult(assign=st.best_assign, R=ev.R, sroa=res,
+                        rounds=st.rounds, escapes=st.escapes,
+                        converged=st.converged, trace=st.trace,
+                        R_search=st.best_R if horizon_mode else ev.R,
+                        comp=st.best_comp)
 
 
 def _start_patterns(scn: Scenario, init: jnp.ndarray, mask: jnp.ndarray,
@@ -388,7 +649,9 @@ def search_core(scn: Scenario, init_assign: jnp.ndarray, mask: jnp.ndarray,
                 n_starts: int = 1,
                 gain_stack: jnp.ndarray | None = None,
                 switch_cost: float = 0.0,
-                incumbent: jnp.ndarray | None = None) -> EngineResult:
+                incumbent: jnp.ndarray | None = None,
+                ladder=None,
+                init_comp: jnp.ndarray | None = None) -> EngineResult:
     """Multi-start wrapper around :func:`engine_core` (still traceable).
 
     ``n_starts > 1`` vmaps the whole search loop over distinct initial
@@ -408,14 +671,17 @@ def search_core(scn: Scenario, init_assign: jnp.ndarray, mask: jnp.ndarray,
     if n_starts <= 1:
         return engine_core(scn, init_assign, mask, lam, cfg, max_rounds,
                            escape_iters, top_k, gain_stack, switch_cost,
-                           incumbent)
+                           incumbent, ladder, init_comp)
     init = jnp.asarray(init_assign, jnp.int32)
     inits = _start_patterns(scn, init, jnp.asarray(mask, bool), n_starts)
 
     def one(ia):
+        # Every restart explores compression from the caller's init levels
+        # (start 0 = caller's assignment too, so the never-worse property
+        # holds for the joint search as well).
         return engine_core(scn, ia, mask, lam, cfg, max_rounds,
                            escape_iters, top_k, gain_stack, switch_cost,
-                           incumbent)
+                           incumbent, ladder, init_comp)
 
     res = jax.vmap(one)(inits)
     i = jnp.argmin(res.R_search if gain_stack is not None else res.R)
@@ -423,7 +689,8 @@ def search_core(scn: Scenario, init_assign: jnp.ndarray, mask: jnp.ndarray,
 
 
 @partial(jax.jit, static_argnames=("cfg", "max_rounds", "escape_iters",
-                                   "top_k", "n_starts", "switch_cost"))
+                                   "top_k", "n_starts", "switch_cost",
+                                   "ladder"))
 def solve_assignment(scn: Scenario, init_assign: jnp.ndarray | None = None,
                      mask: jnp.ndarray | None = None, lam=1.0,
                      cfg: sroa.SroaConfig = sroa.SroaConfig(),
@@ -432,7 +699,9 @@ def solve_assignment(scn: Scenario, init_assign: jnp.ndarray | None = None,
                      n_starts: int = 1,
                      gain_stack: jnp.ndarray | None = None,
                      switch_cost: float = 0.0,
-                     incumbent: jnp.ndarray | None = None) -> EngineResult:
+                     incumbent: jnp.ndarray | None = None,
+                     ladder=None,
+                     init_comp: jnp.ndarray | None = None) -> EngineResult:
     """One cell's ENTIRE assignment search as one jitted call.
 
     Args:
@@ -457,6 +726,11 @@ def solve_assignment(scn: Scenario, init_assign: jnp.ndarray | None = None,
                     incumbent assignment; static — one compile per value.
       incumbent:    (N,) deployed assignment handovers are billed against
                     (defaults to ``init_assign``).
+      ladder:       CompressionLadder (static, hashable); >= 2 rungs makes
+                    per-user compression a joint decision variable (D11).
+                    None / 1 rung keeps the literal pre-D11 program.
+      init_comp:    (N,) i32 starting compression levels (zeros when
+                    None — i.e. every user uncompressed).
     """
     if mask is None:
         mask = jnp.ones((scn.N,), bool)
@@ -472,11 +746,12 @@ def solve_assignment(scn: Scenario, init_assign: jnp.ndarray | None = None,
         gain_stack = incumbent = None
     return search_core(scn, init_assign, mask, lam, cfg, max_rounds,
                        escape_iters, top_k, n_starts, gain_stack,
-                       switch_cost, incumbent)
+                       switch_cost, incumbent, ladder, init_comp)
 
 
 @partial(jax.jit, static_argnames=("cfg", "max_rounds", "escape_iters",
-                                   "top_k", "n_starts", "switch_cost"))
+                                   "top_k", "n_starts", "switch_cost",
+                                   "ladder"))
 def solve_fleet_assignments(fleet: FleetScenario,
                             init_assigns: jnp.ndarray | None = None,
                             lam=1.0,
@@ -486,7 +761,9 @@ def solve_fleet_assignments(fleet: FleetScenario,
                             n_starts: int = 1,
                             gain_stacks: jnp.ndarray | None = None,
                             switch_cost: float = 0.0,
-                            incumbents: jnp.ndarray | None = None
+                            incumbents: jnp.ndarray | None = None,
+                            ladder=None,
+                            init_comps: jnp.ndarray | None = None
                             ) -> EngineResult:
     """Full assignment searches for EVERY cell of a fleet in one call.
 
@@ -511,7 +788,19 @@ def solve_fleet_assignments(fleet: FleetScenario,
         gain = jnp.asarray(gain_stacks[:, 0], fleet.cells.gain.dtype)
         fleet = fleet._replace(cells=fleet.cells._replace(gain=gain))
         gain_stacks = incumbents = None
+    comp_on = _comp_enabled(ladder)
+    comps = (jnp.zeros_like(init) if init_comps is None
+             else jnp.asarray(init_comps, jnp.int32)) if comp_on else None
     if gain_stacks is None:
+        if comp_on:
+            def one_c(cell, init_a, mask, l, ic):
+                return search_core(cell, init_a, mask, l, cfg, max_rounds,
+                                   escape_iters, top_k, n_starts,
+                                   ladder=ladder, init_comp=ic)
+
+            return jax.vmap(one_c)(fleet.cells, init, fleet.mask, lam_v,
+                                   comps)
+
         def one(cell, init_a, mask, l):
             return search_core(cell, init_a, mask, l, cfg, max_rounds,
                                escape_iters, top_k, n_starts)
@@ -519,6 +808,16 @@ def solve_fleet_assignments(fleet: FleetScenario,
         return jax.vmap(one)(fleet.cells, init, fleet.mask, lam_v)
     if incumbents is None:
         incumbents = init
+
+    if comp_on:
+        def one_hc(cell, init_a, mask, l, gs, inc, ic):
+            return search_core(cell, init_a, mask, l, cfg, max_rounds,
+                               escape_iters, top_k, n_starts, gs,
+                               switch_cost, inc, ladder, ic)
+
+        return jax.vmap(one_hc)(fleet.cells, init, fleet.mask, lam_v,
+                                jnp.asarray(gain_stacks, jnp.float32),
+                                jnp.asarray(incumbents, jnp.int32), comps)
 
     def one_h(cell, init_a, mask, l, gs, inc):
         return search_core(cell, init_a, mask, l, cfg, max_rounds,
@@ -551,7 +850,8 @@ def solve_fleet_assignments_bucketed(
         fleet: FleetScenario, init_assigns: jnp.ndarray | None = None,
         lam=1.0, cfg: sroa.SroaConfig = sroa.SroaConfig(),
         max_rounds: int = 48, escape_iters: int = 6, top_k: int = 0,
-        n_starts: int = 1, n_buckets: int = 2) -> EngineResult:
+        n_starts: int = 1, n_buckets: int = 2, ladder=None,
+        init_comps: jnp.ndarray | None = None) -> EngineResult:
     """Bucket-by-difficulty fleet scheduling (EXPERIMENTS.md §Perf item b).
 
     The batched engine while_loop runs every cell for the worst
@@ -571,10 +871,13 @@ def solve_fleet_assignments_bucketed(
     if n_buckets <= 1 or C < 2 * n_buckets:
         return solve_fleet_assignments(fleet, init_assigns, lam, cfg,
                                        max_rounds, escape_iters, top_k,
-                                       n_starts)
+                                       n_starts, ladder=ladder,
+                                       init_comps=init_comps)
     if init_assigns is None:
         init_assigns = fleet_assignments(fleet)
     init_assigns = jnp.asarray(init_assigns, jnp.int32)
+    if init_comps is not None:
+        init_comps = jnp.asarray(init_comps, jnp.int32)
     lam_v = jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (C,))
     order = jnp.argsort(difficulty_proxy(fleet))
 
@@ -591,7 +894,8 @@ def solve_fleet_assignments_bucketed(
         sub = jax.tree.map(lambda x, ix=idx: x[ix], fleet)
         outs.append(solve_fleet_assignments(
             sub, init_assigns[idx], lam_v[idx], cfg, max_rounds,
-            escape_iters, top_k, n_starts))
+            escape_iters, top_k, n_starts, ladder=ladder,
+            init_comps=None if init_comps is None else init_comps[idx]))
     perm = jnp.concatenate(parts)
     inv = jnp.argsort(perm)
     stacked = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *outs)

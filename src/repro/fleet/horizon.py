@@ -104,7 +104,9 @@ def plan_fleet_horizon(fleet: fbatch.FleetScenario,
                        max_rounds: int = 48, escape_iters: int = 6,
                        top_k: int = 0, n_starts: int = 1,
                        mesh=None, rows: np.ndarray | None = None,
-                       gain_stacks: np.ndarray | None = None
+                       gain_stacks: np.ndarray | None = None,
+                       ladder=None,
+                       init_comps: np.ndarray | None = None
                        ) -> fengine.EngineResult:
     """MPC plan for every cell of a fleet in ONE device call.
 
@@ -115,7 +117,9 @@ def plan_fleet_horizon(fleet: fbatch.FleetScenario,
     start, i.e. ``init_assigns``); ``rows`` maps a sliced sub-fleet back
     to its rows of the full-fleet ``state``; callers that already built
     the stacks (e.g. to digest them for a cache key) pass ``gain_stacks``
-    and skip the rollout.
+    and skip the rollout.  ``ladder``/``init_comps`` turn per-user
+    compression into a joint decision variable (D11) — the horizon and
+    compression objectives compose.
     """
     stacks = (gain_stacks if gain_stacks is not None
               else dynamics.predict_fleet_rollout(fleet, state, K,
@@ -127,4 +131,7 @@ def plan_fleet_horizon(fleet: fbatch.FleetScenario,
         gain_stacks=jnp.asarray(stacks),
         switch_cost=float(switch_cost),
         incumbents=None if incumbents is None
-        else jnp.asarray(np.asarray(incumbents), jnp.int32))
+        else jnp.asarray(np.asarray(incumbents), jnp.int32),
+        ladder=ladder,
+        init_comps=None if init_comps is None
+        else jnp.asarray(np.asarray(init_comps), jnp.int32))

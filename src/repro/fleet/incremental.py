@@ -53,6 +53,8 @@ class BatchedTsiaResult(NamedTuple):
     sroa: sroa.SroaResult
     R: float
     history: BatchedTsiaHistory
+    comp: np.ndarray | None = None   # per-user compression levels (D11;
+    #                                  None on the host path / ladder off)
 
 
 def candidate_assigns(assign: np.ndarray, M: int,
@@ -94,7 +96,8 @@ def _history_from_trace(res: fengine.EngineResult, n_movable: int,
     per_round = (1 + top_k) if top_k else (1 + n_movable * (M - 1))
     hist.candidates_evaluated = rounds * per_round if rounds else 1
     kind_name = {fengine.KIND_DESCENT: "descent",
-                 fengine.KIND_ESCAPE: "escape"}
+                 fengine.KIND_ESCAPE: "escape",
+                 fengine.KIND_COMP: "comp"}
     for r in np.flatnonzero(valid):
         hist.R_trace.append(float(R_best[r]))
         user, src, dst, kind, moved = (int(x) for x in mv[r])
@@ -112,7 +115,9 @@ def solve(scn: Scenario, lam=1.0,
           n_starts: int = 1,
           gain_stack: np.ndarray | None = None,
           switch_cost: float = 0.0,
-          incumbent: np.ndarray | None = None) -> BatchedTsiaResult:
+          incumbent: np.ndarray | None = None,
+          ladder=None,
+          init_comp: np.ndarray | None = None) -> BatchedTsiaResult:
     """Device-resident batched TSIA: ONE jitted call for the whole search.
 
     ``mask`` marks active users (inactive slots are never moved and carry
@@ -122,7 +127,8 @@ def solve(scn: Scenario, lam=1.0,
     (move pruning + parallel restarts; DESIGN.md D9); ``gain_stack``
     (K, N, M, e.g. :func:`repro.fleet.dynamics.predict_rollout`) with
     ``switch_cost``/``incumbent`` switches to the time-expanded horizon
-    objective (D10).
+    objective (D10); ``ladder``/``init_comp`` make per-user compression a
+    joint decision variable (D11).
     """
     jmask = (jnp.ones((scn.N,), bool) if mask is None
              else jnp.asarray(mask, bool))
@@ -132,18 +138,23 @@ def solve(scn: Scenario, lam=1.0,
           else jnp.asarray(np.asarray(gain_stack), jnp.float32))
     inc = (None if incumbent is None
            else jnp.asarray(np.asarray(incumbent), jnp.int32))
+    ic = (None if init_comp is None
+          else jnp.asarray(np.asarray(init_comp), jnp.int32))
     res = fengine.solve_assignment(scn, init, jmask, lam, cfg=cfg,
                                    max_rounds=max_rounds,
                                    escape_iters=escape_iters,
                                    top_k=top_k, n_starts=n_starts,
                                    gain_stack=gs,
                                    switch_cost=float(switch_cost),
-                                   incumbent=inc)
+                                   incumbent=inc, ladder=ladder,
+                                   init_comp=ic)
     n_movable = int(np.asarray(jmask).sum())
     hist = _history_from_trace(res, n_movable, scn.M, top_k)
     return BatchedTsiaResult(assign=np.asarray(res.assign),
                              sroa=jax.tree.map(np.asarray, res.sroa),
-                             R=float(res.R), history=hist)
+                             R=float(res.R), history=hist,
+                             comp=None if ladder is None
+                             else np.asarray(res.comp))
 
 
 def solve_host(scn: Scenario, lam=1.0,
@@ -242,7 +253,8 @@ def replan(scn: Scenario, prev_assign: np.ndarray, lam=1.0,
            use_engine: bool = True, top_k: int = 0,
            n_starts: int = 1,
            gain_stack: np.ndarray | None = None,
-           switch_cost: float = 0.0) -> BatchedTsiaResult:
+           switch_cost: float = 0.0, ladder=None,
+           init_comp: np.ndarray | None = None) -> BatchedTsiaResult:
     """Warm-start re-planning after a dynamics event.
 
     Keeps the previous assignment for surviving users (their optimum moves
@@ -261,10 +273,13 @@ def replan(scn: Scenario, prev_assign: np.ndarray, lam=1.0,
     # the nearest-edge seed, so parking them there is free.
     incumbent = init.copy()
     if use_engine:
+        # Arrivals start uncompressed (level 0) unless the caller carried
+        # their previous levels through ``init_comp``.
         return solve(scn, lam, cfg, init_assign=init, max_rounds=max_rounds,
                      escape_iters=escape_iters, mask=mask, top_k=top_k,
                      n_starts=n_starts, gain_stack=gain_stack,
-                     switch_cost=switch_cost, incumbent=incumbent)
+                     switch_cost=switch_cost, incumbent=incumbent,
+                     ladder=ladder, init_comp=init_comp)
     return solve_host(scn, lam, cfg, init_assign=init,
                       max_rounds=max_rounds, escape_iters=escape_iters,
                       mask=mask)

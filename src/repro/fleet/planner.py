@@ -53,6 +53,8 @@ class PlanResult(NamedTuple):
     cached: bool           # served from the LRU cache
     solve_calls: int       # batched device calls spent on this plan
     plan_ms: float         # wall time spent planning (0.0 when cached)
+    comp: np.ndarray | None = None  # (N,) chosen compression levels (D11;
+    #                                 None when the ladder is off)
 
 
 class FleetPlanner:
@@ -83,6 +85,11 @@ class FleetPlanner:
       switch_cost:  weighted-cost charge per user handed over from the
                     incumbent assignment on the horizon path (see
                     :func:`repro.fleet.horizon.estimate_switch_cost`).
+      ladder:       :class:`repro.fed.compression.CompressionLadder`; with
+                    >= 2 rungs the engine optimizes per-user compression
+                    jointly with assignment (D11) and plans carry their
+                    ``comp`` levels.  The ladder joins every cache key, so
+                    tier-aware plans never alias ladder-off plans.
     """
 
     def __init__(self, lam: float = 1.0,
@@ -90,7 +97,7 @@ class FleetPlanner:
                  cache_size: int = 256, max_rounds: int = 48,
                  escape_iters: int = 6, use_engine: bool = True,
                  top_k: int = 0, n_starts: int = 1, n_buckets: int = 1,
-                 horizon: int = 1, switch_cost: float = 0.0):
+                 horizon: int = 1, switch_cost: float = 0.0, ladder=None):
         self.lam = float(lam)
         self.cfg = cfg
         self.cache_size = cache_size
@@ -102,6 +109,11 @@ class FleetPlanner:
         self.n_buckets = int(n_buckets)
         self.horizon = int(horizon)
         self.switch_cost = float(switch_cost)
+        self.ladder = ladder
+        # Dataclass repr pins every rung's factors — two different ladders
+        # (or ladder-off) can never collide on a cache key.
+        self._ladder_extra = (b"" if ladder is None
+                              else repr(ladder).encode())
         self._cache: OrderedDict[str, PlanResult] = OrderedDict()
         self.hits = 0
         self.misses = 0
@@ -142,19 +154,23 @@ class FleetPlanner:
     def plan(self, scn: Scenario, warm_assign: np.ndarray | None = None,
              new_users: np.ndarray | None = None,
              mask: np.ndarray | None = None,
-             gain_stack: np.ndarray | None = None) -> PlanResult:
+             gain_stack: np.ndarray | None = None,
+             warm_comp: np.ndarray | None = None) -> PlanResult:
         """Plan one cell: cache lookup, else (warm-started) batched TSIA.
 
         ``gain_stack`` (K, N, M, from
         :func:`repro.fleet.dynamics.predict_rollout`) plans on the
         time-expanded horizon objective (D10); the warm assignment doubles
         as the incumbent the planner's ``switch_cost`` bills against.
+        ``warm_comp`` seeds the compression search from the previously
+        deployed levels (D11; requires the planner's ladder).
         """
         if mask is not None and np.all(mask):
             mask = None                  # all-active == unmasked plan
         extra = (b"" if gain_stack is None
                  else self._horizon_extra(gain_stack, warm_assign))
-        key = scenario_digest(scn, self.lam, mask, extra=extra)
+        key = scenario_digest(scn, self.lam, mask,
+                              extra=extra + self._ladder_extra)
         hit = self._lookup(key)
         if hit is not None:
             return hit
@@ -168,7 +184,9 @@ class FleetPlanner:
                                      top_k=self.top_k,
                                      n_starts=self.n_starts,
                                      gain_stack=gain_stack,
-                                     switch_cost=self.switch_cost)
+                                     switch_cost=self.switch_cost,
+                                     ladder=self.ladder,
+                                     init_comp=warm_comp)
         elif self.use_engine:
             # Cold plans have no deployed assignment: a switching charge
             # is meaningless, so the horizon stack (if any) rides with
@@ -178,7 +196,8 @@ class FleetPlanner:
                                     escape_iters=self.escape_iters,
                                     mask=mask, top_k=self.top_k,
                                     n_starts=self.n_starts,
-                                    gain_stack=gain_stack)
+                                    gain_stack=gain_stack,
+                                    ladder=self.ladder)
         else:
             res = incremental.solve_host(scn, self.lam, self.cfg,
                                          max_rounds=self.max_rounds,
@@ -189,24 +208,38 @@ class FleetPlanner:
             f=np.asarray(res.sroa.f), p=np.asarray(res.sroa.p),
             R=float(res.R), t=float(res.sroa.t), cached=False,
             solve_calls=res.history.solve_calls,
-            plan_ms=(time.perf_counter() - t0) * 1e3)
+            plan_ms=(time.perf_counter() - t0) * 1e3,
+            comp=getattr(res, "comp", None))
         self._insert(key, plan)
         return plan
 
-    def allocate(self, scn: Scenario, assign: np.ndarray) -> PlanResult:
-        """Resource allocation only (fixed assignment), cached."""
+    def allocate(self, scn: Scenario, assign: np.ndarray,
+                 comp: np.ndarray | None = None) -> PlanResult:
+        """Resource allocation only (fixed assignment), cached.
+
+        ``comp`` re-prices the allocation under the plan's chosen
+        compression levels (requires the planner's ladder).
+        """
         a = np.asarray(assign, np.int32)
-        key = scenario_digest(scn, self.lam, extra=a.tobytes())
+        extra = a.tobytes() + self._ladder_extra
+        if comp is not None:
+            extra += np.asarray(comp, np.int32).tobytes()
+        key = scenario_digest(scn, self.lam, extra=extra)
         hit = self._lookup(key)
         if hit is not None:
             return hit
         t0 = time.perf_counter()
-        res = sroa.solve(scn, a, self.lam, self.cfg)
+        res = sroa.solve(scn, a, self.lam, self.cfg,
+                         comp=None if comp is None
+                         else np.asarray(comp, np.int32),
+                         ladder=self.ladder)
         plan = PlanResult(assign=a, b=np.asarray(res.b),
                           f=np.asarray(res.f), p=np.asarray(res.p),
                           R=float(res.R), t=float(res.t), cached=False,
                           solve_calls=1,
-                          plan_ms=(time.perf_counter() - t0) * 1e3)
+                          plan_ms=(time.perf_counter() - t0) * 1e3,
+                          comp=None if comp is None
+                          else np.asarray(comp, np.int32))
         self._insert(key, plan)
         return plan
 
@@ -216,6 +249,12 @@ class FleetPlanner:
         if w is None:
             return None
         return np.asarray(getattr(w, "assign", w), np.int32)
+
+    @staticmethod
+    def _warm_comp(w) -> np.ndarray | None:
+        """Compression levels carried by a PlanResult warm start, if any."""
+        c = getattr(w, "comp", None)
+        return None if c is None else np.asarray(c, np.int32)
 
     def plan_fleet(self, fleet: fbatch.FleetScenario,
                    warm: list | None = None) -> list[PlanResult]:
@@ -231,7 +270,8 @@ class FleetPlanner:
         if self.use_engine and all(w is None for w in warm):
             return self.plan_fleet_batched(fleet)
         return [self.plan(fleet.cell(i),
-                          warm_assign=self._warm_assign(warm[i]))
+                          warm_assign=self._warm_assign(warm[i]),
+                          warm_comp=self._warm_comp(warm[i]))
                 for i in range(fleet.C)]
 
     def plan_fleet_batched(self,
@@ -244,7 +284,8 @@ class FleetPlanner:
         fleet is sliced out when only some cells miss, so cached cells
         cost nothing on device).
         """
-        keys = [scenario_digest(fleet.cell(i), self.lam)
+        keys = [scenario_digest(fleet.cell(i), self.lam,
+                                extra=self._ladder_extra)
                 for i in range(fleet.C)]
         plans: dict[int, PlanResult] = {}
         miss = []
@@ -267,7 +308,7 @@ class FleetPlanner:
                 sub, lam=self.lam, cfg=self.cfg,
                 max_rounds=self.max_rounds,
                 escape_iters=self.escape_iters, top_k=self.top_k,
-                n_starts=self.n_starts, **kw)
+                n_starts=self.n_starts, ladder=self.ladder, **kw)
             out = jax.tree.map(np.asarray, out)
             ms = (time.perf_counter() - t0) * 1e3 / len(miss)
             for row, i in enumerate(miss):
@@ -279,7 +320,9 @@ class FleetPlanner:
                     f=out.sroa.f[row][:n], p=out.sroa.p[row][:n],
                     R=float(out.R[row]), t=float(out.sroa.t[row]),
                     cached=False, solve_calls=1 if row == 0 else 0,
-                    plan_ms=ms)
+                    plan_ms=ms,
+                    comp=(out.comp[row][:n] if self.ladder is not None
+                          else None))
                 self._insert(keys[i], plan)
                 plans[i] = plan
         return [plans[i] for i in range(fleet.C)]
@@ -308,7 +351,8 @@ class FleetPlanner:
         keys = [scenario_digest(
             fleet.cell(i), self.lam,
             extra=self._horizon_extra(stacks[i],
-                                      None if inc is None else inc[i]))
+                                      None if inc is None else inc[i])
+            + self._ladder_extra)
             for i in range(fleet.C)]
         plans: dict[int, PlanResult] = {}
         miss = []
@@ -332,7 +376,8 @@ class FleetPlanner:
                 max_rounds=self.max_rounds,
                 escape_iters=self.escape_iters, top_k=self.top_k,
                 n_starts=self.n_starts, mesh=mesh,
-                gain_stacks=stacks if full else stacks[sel])
+                gain_stacks=stacks if full else stacks[sel],
+                ladder=self.ladder)
             out = jax.tree.map(np.asarray, out)
             ms = (time.perf_counter() - t0) * 1e3 / len(miss)
             for row, i in enumerate(miss):
@@ -342,12 +387,19 @@ class FleetPlanner:
                     f=out.sroa.f[row][:n], p=out.sroa.p[row][:n],
                     R=float(out.R[row]), t=float(out.sroa.t[row]),
                     cached=False, solve_calls=1 if row == 0 else 0,
-                    plan_ms=ms)
+                    plan_ms=ms,
+                    comp=(out.comp[row][:n] if self.ladder is not None
+                          else None))
                 self._insert(keys[i], plan)
                 plans[i] = plan
         return [plans[i] for i in range(fleet.C)]
 
     def allocate_fleet(self, fleet: fbatch.FleetScenario,
-                       assigns=None) -> sroa.SroaResult:
-        """Fast path: batched SROA for the whole fleet in one XLA call."""
-        return fbatch.solve_batch(fleet, assigns, self.lam, self.cfg)
+                       assigns=None, comps=None) -> sroa.SroaResult:
+        """Fast path: batched SROA for the whole fleet in one XLA call.
+
+        ``comps`` (C, N_max) re-prices the fleet under chosen compression
+        levels via the planner's ladder (D11).
+        """
+        return fbatch.solve_batch(fleet, assigns, self.lam, self.cfg,
+                                  comps, self.ladder)

@@ -37,6 +37,7 @@ from repro.core import sroa
 from repro.core.wireless import Scenario, ScenarioSpec
 from repro.fleet import batch as fbatch
 from repro.fleet import dynamics
+from repro.fleet import engine as fengine
 from repro.fleet.planner import FleetPlanner, PlanResult, scenario_digest
 from repro.fleet.service import drift as fdrift
 from repro.fleet.service import shard as fshard
@@ -61,6 +62,8 @@ class ServiceConfig:
     n_starts: int = 1          # engine multi-start restarts (D9)
     horizon: int = 1           # predicted slots per plan (1 = snapshot; D10)
     switch_cost: float = 0.0   # weighted-cost charge per handover (D10)
+    ladder: object = None      # CompressionLadder: >= 2 rungs makes
+    #                            per-user compression a decision var (D11)
 
 
 class TickRecord(NamedTuple):
@@ -90,9 +93,12 @@ class PlanningService:
         self.planner = planner or FleetPlanner(
             lam=lam, cfg=sroa_cfg or sroa.SroaConfig(),
             max_rounds=cfg.max_rounds, escape_iters=cfg.escape_iters,
-            top_k=cfg.top_k, n_starts=cfg.n_starts)
+            top_k=cfg.top_k, n_starts=cfg.n_starts, ladder=cfg.ladder)
         self.lam = self.planner.lam
         self.sroa_cfg = self.planner.cfg
+        # An explicit planner wins: its ladder is the one every solve uses.
+        self.ladder = self.planner.ladder
+        self._comp_on = fengine._comp_enabled(self.ladder)
         self.mesh = fshard.cell_mesh(devices) if cfg.shard else None
         self.state = dynamics.init_fleet_state(
             fleet, seed=seed, mean_speed=cfg.stream.mean_speed)
@@ -107,7 +113,7 @@ class PlanningService:
     def _horizon_mode(self) -> bool:
         return self.cfg.horizon > 1 or self.cfg.switch_cost != 0.0
 
-    def _engine(self, fleet, init_assigns, rows=None):
+    def _engine(self, fleet, init_assigns, rows=None, init_comps=None):
         gs = inc = None
         sc = 0.0
         if self._horizon_mode():
@@ -126,17 +132,22 @@ class PlanningService:
             fleet, init_assigns, self.lam, self.sroa_cfg,
             self.cfg.max_rounds, self.cfg.escape_iters, mesh=self.mesh,
             top_k=self.cfg.top_k, n_starts=self.cfg.n_starts,
-            gain_stacks=gs, switch_cost=sc, incumbents=inc)
+            gain_stacks=gs, switch_cost=sc, incumbents=inc,
+            ladder=self.ladder, init_comps=init_comps)
 
     def _reprice(self) -> sroa.SroaResult:
         """Batched SROA of the current assignments under the live channel."""
-        res = self.planner.allocate_fleet(self.fleet,
-                                          jnp.asarray(self.assigns))
+        res = self.planner.allocate_fleet(
+            self.fleet, jnp.asarray(self.assigns),
+            jnp.asarray(self.comps) if self._comp_on else None)
         return jax.tree.map(np.asarray, res)
 
     def _bootstrap(self) -> None:
         out = self._engine(self.fleet, None)
         self.assigns = np.asarray(out.assign).copy()
+        # Deployed compression levels ride with the assignments (level 0 ==
+        # uncompressed when the ladder is off, so the array always exists).
+        self.comps = np.asarray(out.comp).copy()
         self.alloc = self._reprice()
         self.gain_ref = np.asarray(self.fleet.cells.gain,
                                    np.float64).copy()
@@ -161,7 +172,9 @@ class PlanningService:
             idx = np.arange(b) % C
             sub = jax.tree.map(lambda x, i=idx: x[jnp.asarray(i)],
                                self.fleet)
-            self._engine(sub, jnp.asarray(self.assigns[idx]), rows=idx)
+            self._engine(sub, jnp.asarray(self.assigns[idx]), rows=idx,
+                         init_comps=(jnp.asarray(self.comps[idx])
+                                     if self._comp_on else None))
 
     # --------------------------------------------------------------- cache
     def _cell_row(self, i: int) -> Scenario:
@@ -173,12 +186,14 @@ class PlanningService:
         for i in np.asarray(idx, int):
             mask = self.state.active[i]
             key = scenario_digest(self._cell_row(i), self.lam,
-                                  None if mask.all() else mask)
+                                  None if mask.all() else mask,
+                                  extra=self.planner._ladder_extra)
             plan = PlanResult(
                 assign=self.assigns[i].copy(), b=self.alloc.b[i],
                 f=self.alloc.f[i], p=self.alloc.p[i],
                 R=float(self.alloc.R[i]), t=float(self.alloc.t[i]),
-                cached=False, solve_calls=0, plan_ms=0.0)
+                cached=False, solve_calls=0, plan_ms=0.0,
+                comp=(self.comps[i].copy() if self._comp_on else None))
             self.planner._insert(key, plan)
 
     # -------------------------------------------------------------- replan
@@ -198,7 +213,7 @@ class PlanningService:
             [idx, np.full(self._bucket(k) - k, idx[0], idx.dtype)])
         jidx = jnp.asarray(pidx)
         sub = jax.tree.map(lambda x: x[jidx], self.fleet)
-        init = None
+        init = icomp = None
         if self.cfg.warm_start:
             init = self.assigns[pidx].copy()
             if ev is not None and ev.arrived[pidx].any():
@@ -207,8 +222,15 @@ class PlanningService:
                 ne = np.asarray(fbatch.fleet_assignments(sub))
                 init = np.where(ev.arrived[pidx], ne, init)
             init = jnp.asarray(init, jnp.int32)
-        out = self._engine(sub, init, rows=pidx)
+            if self._comp_on:
+                # Arrivals start uncompressed; survivors keep their level.
+                ic = self.comps[pidx].copy()
+                if ev is not None:
+                    ic = np.where(ev.arrived[pidx], 0, ic)
+                icomp = jnp.asarray(ic, jnp.int32)
+        out = self._engine(sub, init, rows=pidx, init_comps=icomp)
         self.assigns[idx] = np.asarray(out.assign)[:k]
+        self.comps[idx] = np.asarray(out.comp)[:k]
 
     # ---------------------------------------------------------------- serve
     def submit(self) -> PlanRequest:
@@ -270,6 +292,7 @@ class PlanningService:
             "R": R_now.tolist(),
             "assign": self.assigns.tolist(),
             "replanned": sorted(replanned),
+            "comp": self.comps.tolist() if self._comp_on else None,
             "cached": [i not in replanned for i in range(C)],
             "drift_channel": report.channel.tolist(),
             "plan_ms": tick_ms,
@@ -288,12 +311,19 @@ class PlanningService:
         handovers = int(((prev_assigns != self.assigns)
                          & prev_active
                          & np.asarray(self.state.active, bool)).sum())
+        active = np.asarray(self.state.active, bool)
+        tiers = np.asarray(self.fleet.cells.tier)
+        # Tier ids of every active user in a re-searched cell: the replan
+        # burden heterogeneity telemetry (D11) — who pays for churn/drift.
+        tier_replans = (tiers[idx][active[idx]] if idx.size else None)
+        comp_levels = (self.comps[active] if self._comp_on else None)
         self.telemetry.record_tick(
             n_cells=C, n_changed=changed, n_replanned=idx.size,
             engine_calls=engine_calls, alloc_calls=alloc_calls,
             sum_R=sum_R, tick_ms=tick_ms, drift_scores=report.channel,
             objective_scores=report.objective, coalesced=coalesced,
-            handovers=handovers)
+            handovers=handovers, tier_replans=tier_replans,
+            comp_levels=comp_levels)
         rec = TickRecord(tick=self.tick_idx, changed=changed,
                          replanned=np.asarray(idx),
                          engine_calls=engine_calls, sum_R=sum_R,

@@ -29,11 +29,28 @@ from repro.runtime.sharding import cell_mesh  # noqa: F401  (re-export)
 @lru_cache(maxsize=None)
 def _sharded_solver(mesh: Mesh, cfg: sroa.SroaConfig, max_rounds: int,
                     escape_iters: int, top_k: int = 0, n_starts: int = 1,
-                    switch_cost: float = 0.0, horizon: bool = False):
-    """Build (once per mesh/config) the jitted shard-mapped fleet solver."""
-    axis = mesh.axis_names[0]
+                    switch_cost: float = 0.0, horizon: bool = False,
+                    ladder=None):
+    """Build (once per mesh/config) the jitted shard-mapped fleet solver.
 
-    if horizon:
+    ``ladder`` (a hashable :class:`repro.fed.compression.CompressionLadder`)
+    joins the cache key and, when comp mode is on, adds a sharded
+    per-user init-comp operand (D11).
+    """
+    axis = mesh.axis_names[0]
+    comp_on = fengine._comp_enabled(ladder)
+
+    if horizon and comp_on:
+        def local(cells, init, mask, lam_v, gains, incs, comps):
+            def one(cell, ia, mk, lam, gs, inc, cp):
+                return fengine.search_core(cell, ia, mk, lam, cfg,
+                                           max_rounds, escape_iters, top_k,
+                                           n_starts, gs, switch_cost, inc,
+                                           ladder, cp)
+            return jax.vmap(one)(cells, init, mask, lam_v, gains, incs,
+                                 comps)
+        n_in = 7
+    elif horizon:
         # Horizon operands (predicted-gain stacks + incumbent assignments)
         # shard over the cell axis exactly like the fleet leaves.
         def local(cells, init, mask, lam_v, gains, incs):
@@ -43,6 +60,15 @@ def _sharded_solver(mesh: Mesh, cfg: sroa.SroaConfig, max_rounds: int,
                                            n_starts, gs, switch_cost, inc)
             return jax.vmap(one)(cells, init, mask, lam_v, gains, incs)
         n_in = 6
+    elif comp_on:
+        def local(cells, init, mask, lam_v, comps):
+            def one(cell, ia, mk, lam, cp):
+                return fengine.search_core(cell, ia, mk, lam, cfg,
+                                           max_rounds, escape_iters, top_k,
+                                           n_starts, None, 0.0, None,
+                                           ladder, cp)
+            return jax.vmap(one)(cells, init, mask, lam_v, comps)
+        n_in = 5
     else:
         def local(cells, init, mask, lam_v):
             def one(cell, ia, mk, lam):
@@ -78,7 +104,9 @@ def solve_fleet_sharded(fleet: fbatch.FleetScenario,
                         n_starts: int = 1,
                         gain_stacks: jnp.ndarray | None = None,
                         switch_cost: float = 0.0,
-                        incumbents: jnp.ndarray | None = None
+                        incumbents: jnp.ndarray | None = None,
+                        ladder=None,
+                        init_comps: jnp.ndarray | None = None
                         ) -> fengine.EngineResult:
     """Fleet-wide assignment search, sharded over devices when available.
 
@@ -105,7 +133,8 @@ def solve_fleet_sharded(fleet: fbatch.FleetScenario,
         return fengine.solve_fleet_assignments(
             fleet, init_assigns, lam, cfg, max_rounds, escape_iters,
             top_k, n_starts, gain_stacks=gain_stacks,
-            switch_cost=switch_cost, incumbents=incumbents)
+            switch_cost=switch_cost, incumbents=incumbents,
+            ladder=ladder, init_comps=init_comps)
     C = fleet.C
     ndev = int(np.prod(mesh.devices.shape))
     pad = (-C) % ndev
@@ -113,16 +142,21 @@ def solve_fleet_sharded(fleet: fbatch.FleetScenario,
     lam_v = jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (C,))
     cells, mask = fleet.cells, fleet.mask
     horizon = gain_stacks is not None
+    comp_on = fengine._comp_enabled(ladder)
     operands = [cells, init, mask, lam_v]
     if horizon:
         operands.append(jnp.asarray(gain_stacks, jnp.float32))
         operands.append(init if incumbents is None
                         else jnp.asarray(incumbents, jnp.int32))
+    if comp_on:
+        operands.append(jnp.zeros(init.shape, jnp.int32)
+                        if init_comps is None
+                        else jnp.asarray(init_comps, jnp.int32))
     if pad:
         operands = [_pad_rows(t, pad) for t in operands]
     out = _sharded_solver(mesh, cfg, max_rounds, escape_iters, top_k,
                           n_starts, float(switch_cost),
-                          horizon)(*operands)
+                          horizon, ladder)(*operands)
     if pad:
         out = jax.tree.map(lambda x: x[:C], out)
     return out

@@ -56,6 +56,12 @@ class Telemetry:
         self.tick_ms: list[float] = []
         self.drift_hist = np.zeros(len(self.drift_bins) - 1, np.int64)
         self.objective_hist = np.zeros(len(self.drift_bins) - 1, np.int64)
+        # D11 heterogeneity counters: users re-searched per device tier
+        # (summed over ticks) and the deployed compression-level mix of
+        # the LAST tick (a histogram of levels, not a rolling sum — the
+        # mix is a state, not a rate).
+        self.tier_replans: dict[int, int] = {}
+        self.comp_hist: dict[int, int] = {}
 
     # ------------------------------------------------------------- recording
     def record_request(self, latency_ms: float) -> None:
@@ -66,7 +72,8 @@ class Telemetry:
                     engine_calls: int, alloc_calls: int, sum_R: float,
                     tick_ms: float, drift_scores=None,
                     objective_scores=None, coalesced: int = 0,
-                    handovers: int = 0) -> None:
+                    handovers: int = 0, tier_replans=None,
+                    comp_levels=None) -> None:
         self.ticks += 1
         self.cells += int(n_cells)
         self.cells_changed += int(n_changed)
@@ -85,6 +92,20 @@ class Telemetry:
             hist, _ = np.histogram(np.asarray(objective_scores, np.float64),
                                    bins=self.drift_bins)
             self.objective_hist += hist
+        if tier_replans is not None:
+            # flat array of tier ids, one per re-searched user this tick
+            tiers, counts = np.unique(
+                np.asarray(tier_replans, np.int64), return_counts=True)
+            for t, n in zip(tiers, counts):
+                self.tier_replans[int(t)] = (self.tier_replans.get(int(t), 0)
+                                             + int(n))
+        if comp_levels is not None:
+            # flat array of deployed levels over active users (replaces the
+            # previous mix: the deployed state, not an accumulation)
+            lvls, counts = np.unique(
+                np.asarray(comp_levels, np.int64), return_counts=True)
+            self.comp_hist = {int(lv): int(n)
+                              for lv, n in zip(lvls, counts)}
 
     # ------------------------------------------------------------- reporting
     @staticmethod
@@ -120,6 +141,11 @@ class Telemetry:
                         "p99": self._pct(self.tick_ms, 99)},
             "drift_hist": self._hist_dict(self.drift_hist),
             "objective_drift_hist": self._hist_dict(self.objective_hist),
+            # string keys so the record JSON round-trips losslessly
+            "per_tier_replans": {str(t): n for t, n
+                                 in sorted(self.tier_replans.items())},
+            "compression_hist": {str(lv): n for lv, n
+                                 in sorted(self.comp_hist.items())},
         }
 
     def emit(self, fh=None) -> str:

@@ -51,13 +51,37 @@ def plan_request(planner, scn, warm_assign=None, new_users=None,
     }
 
 
+def _parse_tiers(s: str) -> tuple:
+    """``--tiers`` grammar: comma-separated rungs of
+    ``name[:cycle_mult[:size_mult[:f_scale[:prob]]]]`` — omitted fields
+    default to 1.0 (e.g. ``lo:1.5:1.0:0.6:0.3,mid,hi:0.7:1.2:1.4:0.3``)."""
+    from repro.core.wireless import DeviceTier
+
+    tiers = []
+    for part in s.split(","):
+        fields = part.strip().split(":")
+        vals = [float(x) for x in fields[1:]]
+        kw = dict(zip(("cycle_mult", "size_mult", "f_scale", "prob"), vals))
+        tiers.append(DeviceTier(fields[0], **kw))
+    return tuple(tiers)
+
+
+def _serve_ladder(args):
+    if not args.compression:
+        return None
+    from repro.fed.compression import default_ladder
+    return default_ladder(args.topk_frac)
+
+
 def _draw_serve_fleet(args):
     from repro.core import sroa
     from repro.core.wireless import ScenarioSpec
     from repro.fleet import draw_fleet
 
     spec = dataclasses.replace(ScenarioSpec(), N=args.cell_users,
-                               M=args.cell_edges)
+                               M=args.cell_edges,
+                               tiers=_parse_tiers(args.tiers)
+                               if args.tiers else ())
     n_lo = min(max(4, args.cell_users // 2), args.cell_users)
     fleet = draw_fleet(args.seed, args.cells, spec,
                        n_range=(n_lo, args.cell_users))
@@ -73,17 +97,23 @@ def run_service(args) -> dict:
                                      ServiceConfig, run_load)
 
     spec, fleet, cfg = _draw_serve_fleet(args)
+    ladder = _serve_ladder(args)
     svc_cfg = ServiceConfig(
         drift=DriftConfig(channel_threshold=args.drift_threshold,
                           objective_threshold=args.obj_threshold),
         event_rate=args.event_rate, replan_all=args.replan_all,
         max_rounds=args.plan_rounds, escape_iters=2,
         top_k=args.top_k, n_starts=args.n_starts,
-        horizon=args.horizon, switch_cost=args.switch_cost)
+        horizon=args.horizon, switch_cost=args.switch_cost,
+        ladder=ladder)
     mode = "replan-all" if args.replan_all else "drift-gated"
     if args.horizon > 1 or args.switch_cost:
         mode += (f", horizon K={args.horizon}"
                  f" switch_cost={args.switch_cost:g}")
+    if args.tiers:
+        mode += f", {len(spec.tiers)} device tiers"
+    if ladder is not None:
+        mode += f", compression ladder ({len(ladder)} rungs)"
     print(f"[serve] fleet: {fleet.C} cells, N_max={fleet.N_max}, "
           f"M={fleet.M} (streaming control plane, {mode})")
     t0 = time.time()
@@ -114,7 +144,8 @@ def run_planner(args) -> dict:
     planner = FleetPlanner(lam=args.lam, cfg=cfg,
                            max_rounds=args.plan_rounds, escape_iters=2,
                            use_engine=not args.host_loop,
-                           top_k=args.top_k, n_starts=args.n_starts)
+                           top_k=args.top_k, n_starts=args.n_starts,
+                           ladder=_serve_ladder(args))
 
     route = "host loop" if args.host_loop else "device-resident engine"
     print(f"[plan] fleet: {fleet.C} cells, N_max={fleet.N_max}, "
@@ -190,6 +221,17 @@ def main(argv=None):
     ap.add_argument("--switch-cost", type=float, default=0.0,
                     help="weighted-cost charge per handover off the "
                          "deployed assignment (rolling-horizon mode)")
+    ap.add_argument("--tiers", default="",
+                    help="device tiers, comma-separated "
+                         "name[:cycle_mult[:size_mult[:f_scale[:prob]]]] "
+                         "rungs (e.g. 'lo:1.5:1.0:0.6:0.3,mid,"
+                         "hi:0.7:1.2:1.4:0.3'); empty = homogeneous (D11)")
+    ap.add_argument("--compression", action="store_true",
+                    help="optimize per-user upload compression jointly "
+                         "with assignment (none/int8/top-k ladder; D11)")
+    ap.add_argument("--topk-frac", type=float, default=0.05,
+                    help="top-k sparsification fraction of the ladder's "
+                         "highest rung (with --compression)")
     ap.add_argument("--plan-rounds", type=int, default=12,
                     help="batched-TSIA iteration budget per cold plan")
     ap.add_argument("--event-rate", type=float, default=0.4,

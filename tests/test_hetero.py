@@ -1,0 +1,327 @@
+"""D11 heterogeneity: tiers, compression ladder, parity, telemetry.
+
+The load-bearing contract: homogeneous tiers (all multipliers 1.0) plus a
+disabled compression ladder must normalize to the LITERAL pre-D11 program
+— bitwise-identical outputs on the engine, fused-kernel, and sharded
+paths — while real tiers/ladders price each user's true compute and
+upload load into every solve.
+"""
+import dataclasses
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sroa, wireless
+from repro.fed import compression as comp_lib
+from repro.fleet import batch as fbatch
+from repro.fleet import dynamics as fdyn
+from repro.fleet import engine as fengine
+from repro.fleet.service import shard as fshard
+from repro.fleet.service.telemetry import Telemetry
+
+CFG = sroa.SroaConfig(b_iters=20, f_iters=14, p_iters=10, t_iters=14)
+LAM = 1.0
+SPEC = dataclasses.replace(wireless.ScenarioSpec(), N=8, M=3)
+TIERS = (
+    wireless.DeviceTier("lo", cycle_mult=1.6, size_mult=1.0, f_scale=0.55,
+                        prob=0.35),
+    wireless.DeviceTier("mid"),
+    wireless.DeviceTier("hi", cycle_mult=0.7, size_mult=1.2, f_scale=1.5,
+                        prob=0.30),
+)
+# One tier with unit multipliers: the homogeneous fleet expressed through
+# the tier machinery — must be bitwise the no-tier program.
+ONES_TIER = (wireless.DeviceTier("only"),)
+
+
+# -------------------------------------------------------- spec validation
+@pytest.mark.parametrize("kw", [
+    {"N": 0}, {"M": -1}, {"f_max_hz": 0.0}, {"f_max_hz": -5e9},
+    {"s_bytes": -1.0}, {"alpha": 0.0}, {"L": 0}, {"K": -2}, {"I": 0},
+    {"B_cloud_hz": 0.0}, {"B_edge_range_hz": (0.0, 1e6)},
+    {"B_edge_range_hz": (2e6, 1e6)}, {"c_range": (-1.0, 1e5)},
+    {"D_range": (200, 100)},
+])
+def test_spec_rejects_nonpositive(kw):
+    with pytest.raises(ValueError):
+        wireless.ScenarioSpec(**kw)
+
+
+@pytest.mark.parametrize("tier", [
+    wireless.DeviceTier("bad", cycle_mult=0.0),
+    wireless.DeviceTier("bad", size_mult=-0.5),
+    wireless.DeviceTier("bad", f_scale=0.0),
+    wireless.DeviceTier("bad", prob=-0.1),
+    "not-a-tier",
+])
+def test_spec_rejects_bad_tiers(tier):
+    with pytest.raises(ValueError):
+        wireless.ScenarioSpec(tiers=(tier,))
+
+
+def test_validate_scenario_catches_mismatched_arrays():
+    scn = wireless.draw_scenario(0, SPEC)
+    wireless.validate_scenario(scn)                         # clean passes
+    with pytest.raises(ValueError, match="gain"):
+        wireless.validate_scenario(scn._replace(gain=scn.gain[:-1]))
+    with pytest.raises(ValueError, match="cycle_mult"):
+        wireless.validate_scenario(
+            scn._replace(cycle_mult=scn.cycle_mult[:-2]))
+    with pytest.raises(ValueError, match="B_edges"):
+        wireless.validate_scenario(scn._replace(B_edges=scn.B_edges[:1]))
+    with pytest.raises(ValueError, match="f_max"):
+        wireless.validate_scenario(
+            scn._replace(f_max=scn.f_max.at[0].set(-1.0)))
+    with pytest.raises(ValueError, match="s_bits"):
+        wireless.validate_scenario(
+            scn._replace(s_bits=jnp.asarray(0.0, jnp.float32)))
+
+
+# --------------------------------------------------- compression accounting
+def test_compressed_bytes_topk_edges():
+    params = {"w": np.zeros((100, 10), np.float32),
+              "b": np.zeros((7,), np.float32)}
+    n = 1007
+    assert comp_lib.compressed_bytes(params) == n * 4
+    assert comp_lib.compressed_bytes(params, int8=True) == n
+    # frac 0.0 still ships max(1, ...) = 1 entry per leaf (value + index)
+    assert comp_lib.compressed_bytes(params, topk_frac=0.0) == 2 * (4 + 4)
+    # frac 1.0 ships every entry of every leaf
+    assert comp_lib.compressed_bytes(params, topk_frac=1.0) == n * (4 + 4)
+    assert (comp_lib.compressed_bytes(params, topk_frac=1.0, int8=True)
+            == n * (1 + 4))
+    # per-leaf ceil: 10% of 1000 + 10% of 7 -> 100 + 1 kept entries
+    assert comp_lib.compressed_bytes(params, topk_frac=0.1) == 101 * 8
+    for bad in (-0.1, 1.5):
+        with pytest.raises(ValueError):
+            comp_lib.compressed_bytes(params, topk_frac=bad)
+
+
+def test_int8_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    upd = {"w": jnp.asarray(rng.normal(size=(64, 32)), jnp.float32),
+           "b": jnp.asarray(rng.normal(size=(32,)) * 100, jnp.float32)}
+    q, scales = comp_lib.int8_quantize(upd)
+    deq = comp_lib.int8_dequantize(q, scales)
+    for name in upd:
+        err = np.abs(np.asarray(deq[name]) - np.asarray(upd[name]))
+        # round-to-nearest at step `scale`: error <= scale/2 (+ eps)
+        scale = float(np.max(np.abs(np.asarray(upd[name])))) / 127.0
+        assert err.max() <= scale * 0.5 + 1e-7
+
+
+def test_topk_keeps_budget_and_error_feedback():
+    rng = np.random.default_rng(1)
+    upd = {"w": jnp.asarray(rng.normal(size=(40, 10)), jnp.float32)}
+    state = comp_lib.topk_init(upd)
+    kept, new_state = comp_lib.topk_compress(upd, state, frac=0.1)
+    nz = int(np.count_nonzero(np.asarray(kept["w"])))
+    assert nz >= 40  # ceil(400 * 0.1), ties may keep a few more
+    # kept + residual reconstructs the (error-fed) update exactly
+    np.testing.assert_allclose(
+        np.asarray(kept["w"]) + np.asarray(new_state.error["w"]),
+        np.asarray(upd["w"]), rtol=1e-6)
+
+
+def test_ladder_validation_and_default_factors():
+    CL = comp_lib.CompressionLevel
+    with pytest.raises(ValueError):            # level 0 must be identity
+        comp_lib.CompressionLadder(levels=(CL("x", 0.5, 1.0),))
+    with pytest.raises(ValueError):            # bytes_factor in (0, 1]
+        comp_lib.CompressionLadder(levels=(CL("none", 1.0, 1.0),
+                                           CL("bad", 0.0, 1.0)))
+    with pytest.raises(ValueError):            # epoch_factor >= 1
+        comp_lib.CompressionLadder(levels=(CL("none", 1.0, 1.0),
+                                           CL("bad", 0.5, 0.9)))
+    lad = comp_lib.default_ladder(0.05)
+    assert len(lad) == 3
+    # factors priced exactly by compressed_bytes on a 1M-param reference
+    ref = np.zeros(1_000_000, np.float32)
+    full = comp_lib.compressed_bytes(ref)
+    assert lad.bytes_factors()[1] == (
+        comp_lib.compressed_bytes(ref, int8=True) / full)
+    assert lad.bytes_factors()[2] == (
+        comp_lib.compressed_bytes(ref, topk_frac=0.05, int8=True) / full)
+    assert lad.epoch_factors()[0] == 1.0
+    # hashable => usable as a jit static argument
+    assert hash(lad) == hash(comp_lib.default_ladder(0.05))
+
+
+# ------------------------------------------------------------ draw & churn
+def test_tier_draw_preserves_legacy_rng_prefix():
+    """Tier draws append to the rng stream: every legacy leaf is bitwise
+    unchanged when tiers are enabled for the same seed."""
+    plain = wireless.draw_scenario(7, SPEC)
+    tiered = wireless.draw_scenario(
+        7, dataclasses.replace(SPEC, tiers=TIERS))
+    for name in ("user_pos", "edge_pos", "gain", "gain_cloud", "B_edges",
+                 "c", "D", "p_max"):
+        np.testing.assert_array_equal(np.asarray(getattr(plain, name)),
+                                      np.asarray(getattr(tiered, name)))
+    # tier lookup arrays are consistent with the drawn tier indices
+    t = np.asarray(tiered.tier)
+    assert t.min() >= 0 and t.max() < len(TIERS)
+    np.testing.assert_allclose(
+        np.asarray(tiered.cycle_mult),
+        np.array([TIERS[i].cycle_mult for i in t]), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(tiered.f_max),
+        SPEC.f_max_hz * np.array([TIERS[i].f_scale for i in t]), rtol=1e-6)
+
+
+def test_churn_arrivals_draw_tiers():
+    spec = dataclasses.replace(SPEC, tiers=TIERS)
+    scn = wireless.draw_scenario(0, spec)
+    state = fdyn.init_state(scn, seed=0)
+    rng = np.random.default_rng(0)
+    seen = set()
+    for _ in range(12):
+        scn, state, ev = fdyn.churn_step(scn, state, rng, spec,
+                                         arrival_rate=0.9,
+                                         departure_rate=0.3)
+        t = np.asarray(scn.tier)
+        assert t.min() >= 0 and t.max() < len(TIERS)
+        np.testing.assert_allclose(
+            np.asarray(scn.cycle_mult),
+            np.array([TIERS[i].cycle_mult for i in t]), rtol=1e-6)
+        seen.update(t[np.asarray(ev.arrived, np.int64)].tolist())
+    assert len(seen) >= 2   # arrivals sample across tiers
+
+
+# ------------------------------------------------------------------ parity
+def _assert_bitwise(a: fengine.EngineResult, b: fengine.EngineResult):
+    np.testing.assert_array_equal(np.asarray(a.assign), np.asarray(b.assign))
+    for name in ("b", "f", "p", "t"):
+        np.testing.assert_array_equal(np.asarray(getattr(a.sroa, name)),
+                                      np.asarray(getattr(b.sroa, name)))
+    np.testing.assert_array_equal(np.asarray(a.R), np.asarray(b.R))
+
+
+def test_engine_parity_ones_tiers_and_ladder_off():
+    """All-ones tiers + disabled ladder == the literal pre-D11 engine."""
+    plain = wireless.draw_scenario(3, SPEC)
+    ones = wireless.draw_scenario(
+        3, dataclasses.replace(SPEC, tiers=ONES_TIER))
+    mask = jnp.ones((SPEC.N,), bool)
+    ref = fengine.solve_assignment(plain, None, mask, LAM, cfg=CFG,
+                                   max_rounds=8, escape_iters=2)
+    got = fengine.solve_assignment(ones, None, mask, LAM, cfg=CFG,
+                                   max_rounds=8, escape_iters=2)
+    _assert_bitwise(got, ref)
+    # a single-rung ladder disables comp mode -> same literal program
+    one_rung = comp_lib.CompressionLadder()
+    lad = fengine.solve_assignment(ones, None, mask, LAM, cfg=CFG,
+                                   max_rounds=8, escape_iters=2,
+                                   ladder=one_rung)
+    _assert_bitwise(lad, ref)
+    np.testing.assert_array_equal(np.asarray(lad.comp),
+                                  np.zeros(SPEC.N, np.int32))
+
+
+def test_fleet_parity_fused_kernel_and_sharded():
+    """Fleet solves (plain jit, use_pallas fused kernel, shard_mapped)
+    are leaf-for-leaf identical between no-tiers and all-ones tiers."""
+    fleet_p = fbatch.draw_fleet(5, 4, SPEC, n_range=(6, 8))
+    fleet_o = fbatch.draw_fleet(
+        5, 4, dataclasses.replace(SPEC, tiers=ONES_TIER), n_range=(6, 8))
+    ref = fengine.solve_fleet_assignments(fleet_p, lam=LAM, cfg=CFG,
+                                          max_rounds=6, escape_iters=1)
+    got = fengine.solve_fleet_assignments(fleet_o, lam=LAM, cfg=CFG,
+                                          max_rounds=6, escape_iters=1)
+    _assert_bitwise(got, ref)
+    # fused Pallas bisection kernel path
+    pcfg = dataclasses.replace(CFG, use_pallas=True)
+    ref_k = fbatch.solve_batch(fleet_p, lam=LAM, cfg=pcfg)
+    got_k = fbatch.solve_batch(fleet_o, lam=LAM, cfg=pcfg)
+    for name in ("b", "f", "p", "R"):
+        np.testing.assert_array_equal(np.asarray(getattr(got_k, name)),
+                                      np.asarray(getattr(ref_k, name)))
+    # shard_mapped path (1-device mesh on CPU CI)
+    mesh = fshard.cell_mesh()
+    ref_s = fshard.solve_fleet_sharded(fleet_p, lam=LAM, cfg=CFG,
+                                       max_rounds=6, escape_iters=1,
+                                       mesh=mesh)
+    got_s = fshard.solve_fleet_sharded(fleet_o, lam=LAM, cfg=CFG,
+                                       max_rounds=6, escape_iters=1,
+                                       mesh=mesh)
+    _assert_bitwise(got_s, ref_s)
+
+
+# --------------------------------------------------- compression as a var
+def test_comp_engine_beats_or_matches_plain():
+    spec = dataclasses.replace(SPEC, tiers=TIERS)
+    scn = wireless.draw_scenario(3, spec)
+    mask = jnp.ones((SPEC.N,), bool)
+    plain = fengine.solve_assignment(scn, None, mask, LAM, cfg=CFG,
+                                     max_rounds=8, escape_iters=2)
+    lad = comp_lib.default_ladder()
+    comp = fengine.solve_assignment(scn, None, mask, LAM, cfg=CFG,
+                                    max_rounds=8, escape_iters=2,
+                                    ladder=lad)
+    levels = np.asarray(comp.comp)
+    assert levels.min() >= 0 and levels.max() < len(lad)
+    # level 0 is always available, so comp can only help
+    assert float(comp.R) <= float(plain.R) + 1e-3
+    assert levels.max() > 0   # ...and on this draw it does engage
+
+
+def test_tier_aware_beats_blind_deploy():
+    """ISSUE 9 acceptance, single-cell version: pricing true per-tier
+    constants + compression strictly beats the tier-blind plan when both
+    deploys are billed on the real tiered scenario."""
+    spec = dataclasses.replace(SPEC, tiers=TIERS)
+    scn = wireless.draw_scenario(3, spec)
+    mask = jnp.ones((SPEC.N,), bool)
+    blind_scn = scn._replace(cycle_mult=jnp.ones_like(scn.cycle_mult),
+                             size_mult=jnp.ones_like(scn.size_mult))
+    blind = fengine.solve_assignment(blind_scn, None, mask, LAM, cfg=CFG,
+                                     max_rounds=8, escape_iters=2)
+    lad = comp_lib.default_ladder()
+    aware = fengine.solve_assignment(scn, None, mask, LAM, cfg=CFG,
+                                     max_rounds=8, escape_iters=2,
+                                     ladder=lad)
+    from repro.core.system_model import evaluate
+    deploy_blind = sroa.solve(scn, blind.assign, LAM, CFG)
+    R_blind = float(evaluate(scn, blind.assign, deploy_blind.b,
+                             deploy_blind.f, deploy_blind.p, LAM).R)
+    assert float(aware.R) < R_blind
+
+
+# -------------------------------------------------------------- telemetry
+def test_telemetry_tier_and_comp_roundtrip():
+    tm = Telemetry()
+    tm.record_tick(n_cells=2, n_changed=1, n_replanned=1, engine_calls=1,
+                   alloc_calls=1, sum_R=10.0, tick_ms=1.0,
+                   tier_replans=[0, 0, 2, 1], comp_levels=[0, 1, 1, 2, 2])
+    tm.record_tick(n_cells=2, n_changed=0, n_replanned=1, engine_calls=1,
+                   alloc_calls=1, sum_R=10.0, tick_ms=1.0,
+                   tier_replans=[2], comp_levels=[0, 0, 1, 2, 2])
+    snap = tm.snapshot()
+    # tier replans accumulate; the compression mix is the LAST deployed state
+    assert snap["per_tier_replans"] == {"0": 2, "1": 1, "2": 2}
+    assert snap["compression_hist"] == {"0": 2, "1": 1, "2": 2}
+    rt = json.loads(json.dumps(snap))
+    assert rt["per_tier_replans"] == snap["per_tier_replans"]
+    assert rt["compression_hist"] == snap["compression_hist"]
+    tm.reset()
+    snap2 = tm.snapshot()
+    assert snap2["per_tier_replans"] == {} and snap2["compression_hist"] == {}
+
+
+def test_service_tracks_comps_and_feeds_telemetry():
+    from repro.fleet.service.control import PlanningService, ServiceConfig
+    spec = dataclasses.replace(SPEC, tiers=TIERS)
+    fleet = fbatch.draw_fleet(5, 3, spec, n_range=(6, 8))
+    svc = PlanningService(
+        fleet, sroa_cfg=CFG, spec=spec, seed=0,
+        cfg=ServiceConfig(shard=False, ladder=comp_lib.default_ladder(),
+                          max_rounds=6, escape_iters=1))
+    for _ in range(3):
+        svc.tick()
+    snap = svc.telemetry.snapshot()
+    active = int(np.asarray(svc.state.active).sum())
+    assert sum(snap["compression_hist"].values()) == active
+    assert svc.comps.shape == svc.assigns.shape
+    assert int(svc.comps.max()) < len(svc.ladder)
