@@ -1,0 +1,110 @@
+"""Topology design benchmark: designed placement vs fixed uniform (D12).
+
+Each cell draws ``M_cand = 6`` candidate edge sites.  Three claims, all
+asserted (the ISSUE 10 acceptance):
+
+* ``topology/parity``      — an all-open edge mask is BITWISE the
+  fixed-M engine path (masking is a select, never a rewrite);
+* ``topology/equal_count`` — the bilevel design restricted to
+  relocations (``fixed_count``) strictly beats uniform placement at the
+  SAME open-edge count: pure siting gain, no extra hardware;
+* ``topology/fewer_edges`` — with a per-site activation cost the design
+  strictly beats the all-open deploy on total cost
+  ``R + edge_cost * n_open`` while opening FEWER edges: the objective
+  now prices infrastructure, and the design spends less of it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timed
+
+CELLS = 4
+LAM = 1.0
+M_CAND = 6
+N_OPEN = 3
+
+
+def run():
+    from repro.core import sroa
+    from repro.core.wireless import ScenarioSpec
+    from repro.fleet import batch as fbatch
+    from repro.fleet import engine as fengine
+    from repro.fleet import topology as ftopo
+
+    spec = dataclasses.replace(ScenarioSpec(), N=10, M=M_CAND)
+    fleet = fbatch.draw_fleet(3, CELLS, spec, n_range=(8, 10))
+    cfg = sroa.SroaConfig(b_iters=12, f_iters=8, p_iters=6, t_iters=8)
+    ek = dict(max_rounds=10, escape_iters=2)
+
+    def solve(f):
+        return fengine.solve_fleet_assignments(
+            f, fbatch.fleet_assignments(f), LAM, cfg, **ek)
+
+    # ---- parity: all-open mask == fixed-M, bitwise -----------------
+    base = solve(fleet)
+    open_all = solve(ftopo.with_edge_mask(
+        fleet, np.ones((CELLS, M_CAND), bool)))
+    np.testing.assert_array_equal(np.asarray(open_all.assign),
+                                  np.asarray(base.assign))
+    np.testing.assert_array_equal(np.asarray(open_all.R),
+                                  np.asarray(base.R))
+    np.testing.assert_array_equal(np.asarray(open_all.sroa.b),
+                                  np.asarray(base.sroa.b))
+    yield row("topology/parity", 0.0,
+              f"bitwise=1;cells={CELLS};m_cand={M_CAND}")
+
+    # ---- equal count: relocate activation, same open-edge budget ---
+    em0 = ftopo.uniform_mask(CELLS, M_CAND, N_OPEN)
+    uni = ftopo.with_edge_mask(fleet, em0)
+    out_u, us_u = timed(solve, uni)
+    R_uni = float(np.asarray(out_u.R, np.float64).sum())
+    res_eq, us_eq = timed(
+        ftopo.design_topology, fleet, LAM, cfg,
+        ftopo.TopologyConfig(fixed_count=True, max_rounds=8),
+        edge_mask=em0, **ek)
+    R_eq = float(res_eq.R.sum())
+    assert (res_eq.n_open == N_OPEN).all(), "fixed_count must conserve"
+    assert R_eq < R_uni - 1e-6, (
+        f"designed placement must beat uniform at equal count: "
+        f"{R_eq:.1f} >= {R_uni:.1f}")
+    yield row("topology/uniform", us_u,
+              f"sum_R={R_uni:.1f};n_open={N_OPEN * CELLS}")
+    yield row("topology/equal_count", us_eq,
+              f"sum_R={R_eq:.1f};n_open={int(res_eq.n_open.sum())};"
+              f"moves={len(res_eq.history)};"
+              f"inner_rounds={res_eq.inner_rounds}")
+
+    # ---- fewer edges: price activation, beat all-open on total -----
+    edge_cost = 0.05 * R_uni / (N_OPEN * CELLS)
+    topo = ftopo.TopologyConfig(edge_cost=edge_cost, max_rounds=10)
+    all_R = np.asarray(open_all.R, np.float64)
+    total_open = float(all_R.sum() + edge_cost * M_CAND * CELLS)
+    res_fc, us_fc = timed(ftopo.design_topology, fleet, LAM, cfg, topo,
+                          edge_mask=np.ones((CELLS, M_CAND), bool), **ek)
+    total_fc = float(res_fc.total.sum())
+    n_fc = int(res_fc.n_open.sum())
+    assert total_fc < total_open - 1e-6, (
+        f"priced design must beat all-open on total: "
+        f"{total_fc:.1f} >= {total_open:.1f}")
+    assert n_fc < M_CAND * CELLS, (
+        f"priced design must close edges: kept {n_fc}/{M_CAND * CELLS}")
+    yield row("topology/all_open", 0.0,
+              f"total={total_open:.1f};n_open={M_CAND * CELLS};"
+              f"edge_cost={edge_cost:.2f}")
+    yield row("topology/fewer_edges", us_fc,
+              f"total={total_fc:.1f};n_open={n_fc};"
+              f"moves={len(res_fc.history)}")
+    yield row("topology/summary", 0.0,
+              f"equal_count_gain={R_uni - R_eq:.1f};"
+              f"total_gain={total_open - total_fc:.1f};"
+              f"edges_closed={M_CAND * CELLS - n_fc}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for line in run():
+        print(line, flush=True)

@@ -12,6 +12,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   serve — streaming control plane under load       [bench_serve]
   horizon — rolling-horizon (MPC) vs snapshot      [bench_horizon]
   hetero — device tiers + compression vs blind     [bench_hetero]
+  topology — designed edge placement vs uniform    [bench_topology]
 
 ``--json PATH`` additionally writes every row as structured JSON — with
 run metadata (git rev, jax version, backend/device, timestamp) — so
@@ -95,14 +96,14 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: sroa,lambda,tsia,convergence,"
                          "hfl_vs_fl,roofline,fleet,engine,serve,horizon,"
-                         "hetero")
+                         "hetero,topology")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as JSON to PATH")
     args = ap.parse_args()
     from benchmarks import (bench_convergence, bench_engine, bench_fleet,
                             bench_hetero, bench_hfl_vs_fl, bench_horizon,
                             bench_lambda, bench_serve, bench_sroa,
-                            bench_tsia, roofline)
+                            bench_topology, bench_tsia, roofline)
     suites = {
         "sroa": bench_sroa.run,
         "lambda": bench_lambda.run,
@@ -115,6 +116,7 @@ def main() -> None:
         "serve": bench_serve.run,
         "horizon": bench_horizon.run,
         "hetero": bench_hetero.run,
+        "topology": bench_topology.run,
     }
     wanted = args.only.split(",") if args.only else list(suites)
     unknown = [w for w in wanted if w not in suites]

@@ -491,7 +491,7 @@ def solve(scn: Scenario, assign: jnp.ndarray, lam,
     into the constants; None keeps the literal paper model.
     """
     consts = sroa_constants(scn, assign, comp=comp, ladder=ladder)
-    B = scn.B_total
+    B = scn.B_open  # == B_total bitwise when no edge mask (D12)
     return solve_constants(consts, B, B, scn.f_max, scn.p_max, scn.N0,
                            jnp.asarray(lam, jnp.float32), cfg)
 

@@ -55,6 +55,12 @@ class Scenario(NamedTuple):
     tier: jnp.ndarray       # (N,) i32 device-tier index
     cycle_mult: jnp.ndarray  # (N,) cycles/sample multiplier (c_eff = c*mult)
     size_mult: jnp.ndarray  # (N,) model-size multiplier (bits_eff = s*mult)
+    # Topology activation mask (DESIGN.md D12).  ``None`` means every edge
+    # site is live (the pre-topology fixed-M scenario; a distinct pytree
+    # treedef, so None-path programs are literally the old programs).  A
+    # (M,) bool array marks which candidate sites are open; closed sites
+    # are excluded from assignment and contribute no bandwidth.
+    edge_mask: jnp.ndarray | None = None
 
     @property
     def N(self) -> int:
@@ -68,6 +74,16 @@ class Scenario(NamedTuple):
     def B_total(self) -> jnp.ndarray:
         """Total bandwidth (constraint 15b merged as in problem (17))."""
         return jnp.sum(self.B_edges)
+
+    @property
+    def B_open(self) -> jnp.ndarray:
+        """Total bandwidth over OPEN edges (== ``B_total`` when unmasked).
+
+        With ``edge_mask`` all-True the select returns ``B_edges`` exactly,
+        so the sum is bitwise ``B_total`` (D12 parity invariant)."""
+        if self.edge_mask is None:
+            return jnp.sum(self.B_edges)
+        return jnp.sum(jnp.where(self.edge_mask, self.B_edges, 0.0))
 
     # ---- edge -> cloud terms (eqs 11-12); constants given the topology ----
     def rate_cloud(self) -> jnp.ndarray:
@@ -242,9 +258,21 @@ def validate_scenario(scn: Scenario) -> None:
         if not float(getattr(scn, name)) > 0:
             raise ValueError(f"Scenario.{name} must be > 0, "
                              f"got {float(getattr(scn, name))}")
+    if scn.edge_mask is not None:
+        if tuple(scn.edge_mask.shape) != (m,):
+            raise ValueError(
+                f"Scenario.edge_mask has shape {tuple(scn.edge_mask.shape)}, "
+                f"expected ({m},)")
+        if not bool(jnp.any(scn.edge_mask)):
+            raise ValueError("Scenario.edge_mask must keep >= 1 edge open")
 
 
 def nearest_edge_assignment(scn: Scenario) -> jnp.ndarray:
-    """Geographical-distance initialization used by TSIA (Alg 5, line 5)."""
+    """Geographical-distance initialization used by TSIA (Alg 5, line 5).
+
+    Closed candidate sites (D12) are excluded: users seed onto the nearest
+    OPEN edge.  All-open masks leave the distances untouched (bitwise)."""
     d = jnp.linalg.norm(scn.user_pos[:, None, :] - scn.edge_pos[None, :, :], axis=-1)
+    if scn.edge_mask is not None:
+        d = jnp.where(scn.edge_mask[None, :], d, jnp.inf)
     return jnp.argmin(d, axis=1).astype(jnp.int32)

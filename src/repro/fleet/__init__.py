@@ -9,6 +9,8 @@
 * :mod:`repro.fleet.planner`     — the cached :class:`FleetPlanner` facade.
 * :mod:`repro.fleet.horizon`     — rolling-horizon (MPC) planning over a
   predicted mobility window with switching costs (DESIGN.md D10).
+* :mod:`repro.fleet.topology`    — bilevel topology design: edge
+  placement/activation as optimization variables (DESIGN.md D12).
 * :mod:`repro.fleet.service`     — the streaming control plane
   (tick loop, drift-gated replanning, request coalescing, sharding,
   telemetry) serving live traffic over all of the above.
@@ -23,6 +25,9 @@ from repro.fleet.service import (PlanningService, ServiceConfig,
                                  solve_fleet_sharded)
 from repro.fleet.horizon import (HorizonConfig, count_handovers,
                                  estimate_switch_cost, plan_fleet_horizon)
+from repro.fleet.topology import (TopologyConfig, TopologyResult,
+                                  design_topology, proxy_cost, uniform_mask,
+                                  with_edge_mask)
 
 __all__ = [
     "FleetScenario", "candidate_assigns_device", "draw_fleet",
@@ -34,4 +39,6 @@ __all__ = [
     "PlanningService", "ServiceConfig", "solve_fleet_sharded",
     "HorizonConfig", "count_handovers", "estimate_switch_cost",
     "plan_fleet_horizon",
+    "TopologyConfig", "TopologyResult", "design_topology", "proxy_cost",
+    "uniform_mask", "with_edge_mask",
 ]

@@ -58,6 +58,11 @@ class FleetScenario(NamedTuple):
     def M(self) -> int:
         return self.cells.edge_pos.shape[-2]
 
+    @property
+    def edge_mask(self) -> jnp.ndarray | None:
+        """(C, M) bool activation mask, or None when all sites are live (D12)."""
+        return self.cells.edge_mask
+
     def cell(self, i: int) -> Scenario:
         """The i-th cell as a standalone, unpadded Scenario."""
         s = jax.tree.map(lambda x: x[i], self.cells)
@@ -187,7 +192,9 @@ def solve_batch(fleet: FleetScenario, assigns: jnp.ndarray | None = None,
     if assigns is None:
         assigns = fleet_assignments(fleet)
     consts = fleet_constants(fleet, assigns, comps, ladder)
-    B = jnp.sum(fleet.cells.B_edges, axis=-1)
+    em = fleet.cells.edge_mask
+    B = (jnp.sum(fleet.cells.B_edges, axis=-1) if em is None else
+         jnp.sum(jnp.where(em, fleet.cells.B_edges, 0.0), axis=-1))
     lam_v = jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (fleet.C,))
     return solve_constants_batch(consts, B, B, fleet.cells.f_max,
                                  fleet.cells.p_max, fleet.cells.N0, lam_v,
@@ -195,7 +202,8 @@ def solve_batch(fleet: FleetScenario, assigns: jnp.ndarray | None = None,
 
 
 def candidate_assigns_device(assign: jnp.ndarray, M: int,
-                             movable: jnp.ndarray | None = None
+                             movable: jnp.ndarray | None = None,
+                             edge_mask: jnp.ndarray | None = None
                              ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Device-resident single-move neighbourhood with fixed-size padding.
 
@@ -203,13 +211,15 @@ def candidate_assigns_device(assign: jnp.ndarray, M: int,
     ``(assign[n] + k) % M`` for k in 1..M-1 (every edge except its own).
     The candidate count ``A = 1 + N*(M-1)`` depends only on the static
     shapes — never on the mask — so churn (users toggling in ``movable``)
-    re-flags rows in the returned validity vector instead of changing any
-    array shape, and the engine's jitted search never recompiles.
+    and topology changes (sites toggling in ``edge_mask``, D12) re-flag
+    rows in the returned validity vector instead of changing any array
+    shape, and the engine's jitted search never recompiles.
 
     Returns:
       cands: (A, N) int32 candidate patterns.
-      valid: (A,) bool — False rows (moves of non-movable users) must be
-             excluded from any argmin by the caller.
+      valid: (A,) bool — False rows (moves of non-movable users, or moves
+             landing on a closed edge site) must be excluded from any
+             argmin by the caller.
     """
     assign = jnp.asarray(assign, jnp.int32)
     N = assign.shape[0]
@@ -221,8 +231,10 @@ def candidate_assigns_device(assign: jnp.ndarray, M: int,
     moves = jnp.where(eye[:, None, :], dst[:, :, None],
                       assign[None, None, :])               # (N, M-1, N)
     cands = jnp.concatenate([assign[None], moves.reshape(N * (M - 1), N)])
-    valid = jnp.concatenate([jnp.ones((1,), bool),
-                             jnp.repeat(jnp.asarray(movable, bool), M - 1)])
+    move_ok = jnp.repeat(jnp.asarray(movable, bool), M - 1)
+    if edge_mask is not None:
+        move_ok = move_ok & edge_mask[dst.reshape(-1)]
+    valid = jnp.concatenate([jnp.ones((1,), bool), move_ok])
     return cands, valid
 
 
@@ -239,6 +251,6 @@ def solve_candidates(scn: Scenario, assigns: jnp.ndarray, lam=1.0,
     consts = sroa_constants_batched(scn, assigns, mask)
     tile = lambda x: jnp.broadcast_to(x, (A,) + jnp.shape(x))  # noqa: E731
     lam_v = jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (A,))
-    B = tile(scn.B_total)
+    B = tile(scn.B_open)
     return solve_constants_batch(consts, B, B, tile(scn.f_max),
                                  tile(scn.p_max), tile(scn.N0), lam_v, cfg)

@@ -387,24 +387,43 @@ def _rollout_positions(pos: np.ndarray, vel: np.ndarray, K: int, dt: float,
     return out
 
 
+def _shadow_rho(cfg: "StreamConfig") -> float:
+    """AR(1) mean-decay rate of the shadowing term across predicted slots.
+
+    Block fading redraws the shadowing every ``fading_every`` steps, so
+    the CURRENT shadow realization survives a slot boundary with
+    probability ``1 - 1/fading_every`` and is otherwise replaced by a
+    fresh zero-mean (dB) draw.  The mean rollout therefore decays the
+    live shadow geometrically toward 0 dB: ``E[shadow_k] = rho^k *
+    shadow_0`` with ``rho = 1 - 1/fading_every``.  ``fading_every == 0``
+    (fading off) gives rho = 1 — shadowing held fixed, the pre-AR(1)
+    rollout bitwise.
+    """
+    return 1.0 if not cfg.fading_every else 1.0 - 1.0 / cfg.fading_every
+
+
 def predict_rollout(scn: Scenario, state: DynamicsState, K: int,
                     cfg: "StreamConfig | None" = None) -> np.ndarray:
     """(K, N, M) predicted channel-gain stack for one cell (DESIGN.md D10).
 
     A deterministic mean rollout of the Gauss-Markov mobility state:
     positions extrapolate under the expected (decayed) velocity, gains
-    follow the new geometry with the CURRENT shadowing held fixed.  No
-    fading redraws, no churn draws — the rollout predicts exactly what the
-    mobility model makes predictable and nothing more.  Slot 0 is the
-    as-is current gain (bit-identical to ``scn.gain``), so a horizon-1
-    stack scores exactly the snapshot problem.
+    follow the new geometry, and the CURRENT shadowing term decays toward
+    its 0 dB prior as ``rho^k`` (:func:`_shadow_rho` — the AR(1) mean of
+    the block-fading process).  No fading redraws, no churn draws — the
+    rollout predicts exactly what the dynamics model makes predictable
+    and nothing more.  Slot 0 is the as-is current gain (bit-identical to
+    ``scn.gain``), so a horizon-1 stack scores exactly the snapshot
+    problem.
     """
     cfg = cfg or StreamConfig()
     pos = _rollout_positions(np.asarray(scn.user_pos, np.float64),
                              state.velocity, K, cfg.dt, cfg.memory,
                              cfg.side_m)
     edge = np.asarray(scn.edge_pos, np.float64)
-    stack = np.stack([_gains(p, edge, state.shadow_ue_db) for p in pos])
+    rho = _shadow_rho(cfg)
+    stack = np.stack([_gains(p, edge, state.shadow_ue_db * rho ** k)
+                      for k, p in enumerate(pos)])
     stack[0] = np.asarray(scn.gain, np.float64)
     return stack.astype(np.float32)
 
@@ -415,7 +434,8 @@ def predict_fleet_rollout(fleet, state: FleetDynamicsState, K: int,
     """(C, K, N, M) predicted-gain stacks for a whole fleet at once.
 
     Batched :func:`predict_rollout`: one stacked numpy rollout for every
-    cell, slot 0 bit-identical to the live gains.  ``rows`` selects which
+    cell — geometry extrapolated, shadowing AR(1)-decayed toward 0 dB —
+    with slot 0 bit-identical to the live gains.  ``rows`` selects which
     cells of ``state`` the (possibly sliced) ``fleet`` corresponds to —
     the control plane replans sub-fleets, whose dynamics state lives in
     the full-fleet arrays.
@@ -427,7 +447,9 @@ def predict_fleet_rollout(fleet, state: FleetDynamicsState, K: int,
     pos = _rollout_positions(np.asarray(fleet.cells.user_pos, np.float64),
                              vel, K, cfg.dt, cfg.memory, cfg.side_m)
     edge = np.asarray(fleet.cells.edge_pos, np.float64)
-    stack = np.stack([_fleet_gains(p, edge, shadow) for p in pos], axis=1)
+    rho = _shadow_rho(cfg)
+    stack = np.stack([_fleet_gains(p, edge, shadow * rho ** k)
+                      for k, p in enumerate(pos)], axis=1)
     stack[:, 0] = np.asarray(fleet.cells.gain, np.float64)
     return stack.astype(np.float32)
 

@@ -99,12 +99,15 @@ class _EngineState(NamedTuple):
 
 
 def escape_move(assign: jnp.ndarray, R_m: jnp.ndarray, b: jnp.ndarray,
-                mask: jnp.ndarray, M: int):
+                mask: jnp.ndarray, M: int,
+                edge_mask: jnp.ndarray | None = None):
     """The paper's Definition 1/2 escape, as pure device arithmetic.
 
     Costly edge m+ = argmax R_m over *occupied* edges (Definition 1),
     economic edge m- = argmin R_m, costly user = argmax b_n among the
-    movable members of m+ (Definition 2).
+    movable members of m+ (Definition 2).  With an ``edge_mask`` (D12)
+    m- only ranges over OPEN sites — the escape never parks a user on a
+    closed edge; all-open masks leave the argmin input untouched.
 
     Returns (user, m_plus, m_minus, ok): ``ok`` is False when the move is
     undefined (m+ == m-, or m+ has no movable member), matching the seed
@@ -115,7 +118,9 @@ def escape_move(assign: jnp.ndarray, R_m: jnp.ndarray, b: jnp.ndarray,
     counts = psi.sum(axis=0)                               # (M,)
     R_m_occ = jnp.where(counts > 0, R_m, -jnp.inf)
     m_plus = jnp.argmax(R_m_occ).astype(jnp.int32)
-    m_minus = jnp.argmin(R_m).astype(jnp.int32)
+    R_m_open = (R_m if edge_mask is None
+                else jnp.where(edge_mask, R_m, jnp.inf))
+    m_minus = jnp.argmin(R_m_open).astype(jnp.int32)
     member = (assign == m_plus) & mask
     user = jnp.argmax(jnp.where(member, b, -jnp.inf)).astype(jnp.int32)
     ok = (m_plus != m_minus) & (counts[m_plus] > 0) & jnp.any(member)
@@ -174,29 +179,35 @@ def _pruned_candidates(scn: Scenario, current: jnp.ndarray,
     the escape's R_m[0]/b[0] reads keep their full-path meaning); rows
     1..k apply the k cheapest moves by the kernel's marginal-cost
     estimate.  Padding rows (score >= _BIG/2: fewer than k valid moves
-    existed) are flagged invalid, mirroring ``candidate_assigns_device``.
+    existed) and moves landing on a closed site (D12) are flagged
+    invalid, mirroring ``candidate_assigns_device``.
     """
     user, dst, score = _topk_moves_nd(top_k)(
         scn.gain, _move_H(scn), scn.p_max, current, mask,
         jnp.asarray(scn.N0, jnp.float32),
-        jnp.asarray(scn.B_total, jnp.float32))
+        jnp.asarray(scn.B_open, jnp.float32))
     rows = jax.vmap(lambda u, d: current.at[u].set(d))(user, dst)
     cands = jnp.concatenate([current[None, :], rows], axis=0)
-    valid = jnp.concatenate([jnp.ones((1,), bool), score < _BIG / 2])
+    move_ok = score < _BIG / 2
+    if scn.edge_mask is not None:
+        move_ok = move_ok & scn.edge_mask[dst]
+    valid = jnp.concatenate([jnp.ones((1,), bool), move_ok])
     return cands, valid
 
 
 def _comp_candidates(current: jnp.ndarray, comp: jnp.ndarray, M: int,
-                     n_levels: int, mask: jnp.ndarray):
+                     n_levels: int, mask: jnp.ndarray,
+                     edge_mask: jnp.ndarray | None = None):
     """Full joint neighbourhood over (assignment, compression) moves.
 
     Assignment single-moves keep each user's compression level; the extra
     ``N * (n_levels - 1)`` rows change ONE user's level (cyclically, so
     every alternative rung is reachable in one move) while the assignment
     stays put.  Fixed-size like ``candidate_assigns_device`` — masked
-    users' rows are flagged invalid, never dropped.
+    users' rows (and moves onto closed sites, D12) are flagged invalid,
+    never dropped.
     """
-    a_cands, a_valid = candidate_assigns_device(current, M, mask)
+    a_cands, a_valid = candidate_assigns_device(current, M, mask, edge_mask)
     comps_a = jnp.broadcast_to(comp, a_cands.shape)
     N = current.shape[0]
     users = jnp.repeat(jnp.arange(N, dtype=jnp.int32), n_levels - 1)
@@ -226,8 +237,10 @@ def _pruned_candidates_comp(scn: Scenario, current: jnp.ndarray,
     user, dst, score = _topk_moves_nd(top_k)(
         scn.gain, _move_H(scn, comp, ladder), scn.p_max, current, mask,
         jnp.asarray(scn.N0, jnp.float32),
-        jnp.asarray(scn.B_total, jnp.float32))
+        jnp.asarray(scn.B_open, jnp.float32))
     move_ok = score < _BIG / 2
+    if scn.edge_mask is not None:
+        move_ok = move_ok & scn.edge_mask[dst]
     rows = jax.vmap(lambda u, d: current.at[u].set(d))(user, dst)
     lv = comp[user]
     bump = jax.vmap(lambda u, l: comp.at[u].set(l))(user, lv + 1)
@@ -256,7 +269,7 @@ def _score_neighbourhood(scn: Scenario, cands: jnp.ndarray,
     literal pre-D11 scoring.
     """
     consts = sroa_constants_batched(scn, cands, mask, comps, ladder)
-    B = scn.B_total
+    B = scn.B_open
 
     def one(c):
         return sroa.solve_constants_impl(c, B, B, scn.f_max, scn.p_max,
@@ -361,6 +374,12 @@ def engine_core(scn: Scenario, init_assign: jnp.ndarray, mask: jnp.ndarray,
     lam = jnp.asarray(lam, jnp.float32)
     init = jnp.asarray(init_assign, jnp.int32)
     mask = jnp.asarray(mask, bool)
+    em = scn.edge_mask
+    if em is not None:
+        # Re-home init entries sitting on a closed site (D12).  All-open
+        # masks make the select the identity, keeping the fixed-M path
+        # bitwise.
+        init = jnp.where(em[init], init, jnp.argmax(em).astype(jnp.int32))
     horizon_mode = gain_stack is not None
     if horizon_mode:
         incumbent = init if incumbent is None else jnp.asarray(incumbent,
@@ -371,7 +390,7 @@ def engine_core(scn: Scenario, init_assign: jnp.ndarray, mask: jnp.ndarray,
         if top_k > 0:
             cands, valid = _pruned_candidates(scn, st.current, mask, top_k)
         else:
-            cands, valid = candidate_assigns_device(st.current, M, mask)
+            cands, valid = candidate_assigns_device(st.current, M, mask, em)
         if horizon_mode:
             res, ev, R_score = _score_horizon(scn, gain_stack, cands, mask,
                                               lam, cfg, incumbent,
@@ -396,7 +415,7 @@ def engine_core(scn: Scenario, init_assign: jnp.ndarray, mask: jnp.ndarray,
 
         # Paper-style escape at a local optimum (Definitions 1/2).
         e_user, m_plus, m_minus, e_ok = escape_move(
-            st.current, ev.R_m[0], res.b[0], mask, M)
+            st.current, ev.R_m[0], res.b[0], mask, M, em)
         can_escape = (~improving) & e_ok & (st.escapes < escape_iters)
         esc_assign = st.current.at[e_user].set(m_minus)
 
@@ -450,7 +469,7 @@ def engine_core(scn: Scenario, init_assign: jnp.ndarray, mask: jnp.ndarray,
 
     # One final constants-space solve for the winning pattern (also covers
     # max_rounds == 0, where the loop never scored anything).
-    B = scn.B_total
+    B = scn.B_open
     consts = sroa_constants(scn, st.best_assign, mask)
     res = sroa.solve_constants_impl(consts, B, B, scn.f_max, scn.p_max,
                                     scn.N0, lam, cfg)
@@ -509,6 +528,9 @@ def _engine_core_comp(scn: Scenario, init_assign: jnp.ndarray,
     comp0 = (jnp.zeros_like(init) if init_comp is None
              else jnp.asarray(init_comp, jnp.int32))
     mask = jnp.asarray(mask, bool)
+    em = scn.edge_mask
+    if em is not None:
+        init = jnp.where(em[init], init, jnp.argmax(em).astype(jnp.int32))
     horizon_mode = gain_stack is not None
     if horizon_mode:
         incumbent = init if incumbent is None else jnp.asarray(incumbent,
@@ -521,7 +543,7 @@ def _engine_core_comp(scn: Scenario, init_assign: jnp.ndarray,
                 scn, st.current, st.comp, mask, top_k, ladder)
         else:
             cands, comps, valid = _comp_candidates(
-                st.current, st.comp, M, n_levels, mask)
+                st.current, st.comp, M, n_levels, mask, em)
         if horizon_mode:
             res, ev, R_score = _score_horizon(scn, gain_stack, cands, mask,
                                               lam, cfg, incumbent,
@@ -552,7 +574,7 @@ def _engine_core_comp(scn: Scenario, init_assign: jnp.ndarray,
         d_kind = jnp.where(a_moved, KIND_DESCENT, KIND_COMP)
 
         e_user, m_plus, m_minus, e_ok = escape_move(
-            st.current, ev.R_m[0], res.b[0], mask, M)
+            st.current, ev.R_m[0], res.b[0], mask, M, em)
         can_escape = (~improving) & e_ok & (st.escapes < escape_iters)
         esc_assign = st.current.at[e_user].set(m_minus)
 
@@ -609,7 +631,7 @@ def _engine_core_comp(scn: Scenario, init_assign: jnp.ndarray,
         trace=trace0)
     st = lax.while_loop(cond, body, st0) if T > 0 else st0
 
-    B = scn.B_total
+    B = scn.B_open
     consts = sroa_constants(scn, st.best_assign, mask, st.best_comp, ladder)
     res = sroa.solve_constants_impl(consts, B, B, scn.f_max, scn.p_max,
                                     scn.N0, lam, cfg)
@@ -623,7 +645,8 @@ def _engine_core_comp(scn: Scenario, init_assign: jnp.ndarray,
 
 
 def _start_patterns(scn: Scenario, init: jnp.ndarray, mask: jnp.ndarray,
-                    n_starts: int) -> jnp.ndarray:
+                    n_starts: int,
+                    tail: jnp.ndarray | None = None) -> jnp.ndarray:
     """(S, N) initial patterns for multi-start search (D9).
 
     Start 0 is the caller's pattern (so best-of-starts can never be worse
@@ -631,15 +654,31 @@ def _start_patterns(scn: Scenario, init: jnp.ndarray, mask: jnp.ndarray,
     and further starts deterministic pseudo-random draws (fixed key — the
     engine stays a pure function of its arguments).  Masked users keep
     their init value in every start; the engine never moves them.
+
+    With an ``edge_mask`` (D12) the greedy start ranks gains over OPEN
+    sites only and random draws landing on a closed site re-home to the
+    first open one; all-open masks leave every pattern untouched.
+
+    ``tail`` appends ONE extra start row — the receding-horizon warm
+    start (D10): the previous window's winning pattern.  Because it is an
+    additional restart on top of the cold start set, warm-started search
+    is structurally never worse than cold (argmin over a superset).
     """
+    em = scn.edge_mask
     inits = [init]
     if n_starts > 1:
-        greedy = jnp.argmax(scn.gain, axis=1).astype(jnp.int32)
+        g = (scn.gain if em is None
+             else jnp.where(em[None, :], scn.gain, -jnp.inf))
+        greedy = jnp.argmax(g, axis=1).astype(jnp.int32)
         inits.append(jnp.where(mask, greedy, init))
     for s in range(2, n_starts):
         key = jax.random.fold_in(jax.random.PRNGKey(17), s)
         rnd = jax.random.randint(key, init.shape, 0, scn.M, jnp.int32)
+        if em is not None:
+            rnd = jnp.where(em[rnd], rnd, jnp.argmax(em).astype(jnp.int32))
         inits.append(jnp.where(mask, rnd, init))
+    if tail is not None:
+        inits.append(jnp.where(mask, jnp.asarray(tail, jnp.int32), init))
     return jnp.stack(inits, axis=0)
 
 
@@ -651,7 +690,8 @@ def search_core(scn: Scenario, init_assign: jnp.ndarray, mask: jnp.ndarray,
                 switch_cost: float = 0.0,
                 incumbent: jnp.ndarray | None = None,
                 ladder=None,
-                init_comp: jnp.ndarray | None = None) -> EngineResult:
+                init_comp: jnp.ndarray | None = None,
+                tail_init: jnp.ndarray | None = None) -> EngineResult:
     """Multi-start wrapper around :func:`engine_core` (still traceable).
 
     ``n_starts > 1`` vmaps the whole search loop over distinct initial
@@ -665,15 +705,20 @@ def search_core(scn: Scenario, init_assign: jnp.ndarray, mask: jnp.ndarray,
     restart (the switching bill is against the DEPLOYED plan, whatever
     pattern a restart explores from) and the winner is chosen by the
     horizon objective (``R_search``), not the current-slot R.
+
+    ``tail_init`` adds one more restart row — the receding-horizon warm
+    start (the previous window's winning pattern, stashed by the service).
+    Its presence can only grow the start set, so warm never loses to cold.
     """
     if gain_stack is not None and incumbent is None:
         incumbent = jnp.asarray(init_assign, jnp.int32)
-    if n_starts <= 1:
+    if n_starts <= 1 and tail_init is None:
         return engine_core(scn, init_assign, mask, lam, cfg, max_rounds,
                            escape_iters, top_k, gain_stack, switch_cost,
                            incumbent, ladder, init_comp)
     init = jnp.asarray(init_assign, jnp.int32)
-    inits = _start_patterns(scn, init, jnp.asarray(mask, bool), n_starts)
+    inits = _start_patterns(scn, init, jnp.asarray(mask, bool), n_starts,
+                            tail_init)
 
     def one(ia):
         # Every restart explores compression from the caller's init levels
@@ -701,7 +746,8 @@ def solve_assignment(scn: Scenario, init_assign: jnp.ndarray | None = None,
                      switch_cost: float = 0.0,
                      incumbent: jnp.ndarray | None = None,
                      ladder=None,
-                     init_comp: jnp.ndarray | None = None) -> EngineResult:
+                     init_comp: jnp.ndarray | None = None,
+                     tail_init: jnp.ndarray | None = None) -> EngineResult:
     """One cell's ENTIRE assignment search as one jitted call.
 
     Args:
@@ -731,6 +777,9 @@ def solve_assignment(scn: Scenario, init_assign: jnp.ndarray | None = None,
                     None / 1 rung keeps the literal pre-D11 program.
       init_comp:    (N,) i32 starting compression levels (zeros when
                     None — i.e. every user uncompressed).
+      tail_init:    (N,) i32 receding-horizon warm-start pattern (the
+                    previous window's winner); joins the restart set as
+                    one extra row, so warm search never loses to cold.
     """
     if mask is None:
         mask = jnp.ones((scn.N,), bool)
@@ -746,7 +795,7 @@ def solve_assignment(scn: Scenario, init_assign: jnp.ndarray | None = None,
         gain_stack = incumbent = None
     return search_core(scn, init_assign, mask, lam, cfg, max_rounds,
                        escape_iters, top_k, n_starts, gain_stack,
-                       switch_cost, incumbent, ladder, init_comp)
+                       switch_cost, incumbent, ladder, init_comp, tail_init)
 
 
 @partial(jax.jit, static_argnames=("cfg", "max_rounds", "escape_iters",
@@ -763,7 +812,8 @@ def solve_fleet_assignments(fleet: FleetScenario,
                             switch_cost: float = 0.0,
                             incumbents: jnp.ndarray | None = None,
                             ladder=None,
-                            init_comps: jnp.ndarray | None = None
+                            init_comps: jnp.ndarray | None = None,
+                            tail_inits: jnp.ndarray | None = None
                             ) -> EngineResult:
     """Full assignment searches for EVERY cell of a fleet in one call.
 
@@ -774,7 +824,12 @@ def solve_fleet_assignments(fleet: FleetScenario,
     slowest cell finishes — still zero host round trips overall (see
     :func:`solve_fleet_assignments_bucketed` for the scheduling fix).
     ``gain_stacks`` (C, K, N, M) — with ``switch_cost``/``incumbents`` —
-    switches every cell to the time-expanded horizon objective (D10).
+    switches every cell to the time-expanded horizon objective (D10);
+    ``tail_inits`` (C, N) feeds each cell's receding-horizon warm start.
+
+    The optional operands ride in ONE extras pytree: a ``None`` member is
+    an empty subtree, so every on/off combination keeps its own treedef —
+    and hence its own compiled program — without hand-written variants.
     """
     if init_assigns is None:
         init_assigns = fleet_assignments(fleet)
@@ -791,42 +846,23 @@ def solve_fleet_assignments(fleet: FleetScenario,
     comp_on = _comp_enabled(ladder)
     comps = (jnp.zeros_like(init) if init_comps is None
              else jnp.asarray(init_comps, jnp.int32)) if comp_on else None
-    if gain_stacks is None:
-        if comp_on:
-            def one_c(cell, init_a, mask, l, ic):
-                return search_core(cell, init_a, mask, l, cfg, max_rounds,
-                                   escape_iters, top_k, n_starts,
-                                   ladder=ladder, init_comp=ic)
+    if gain_stacks is not None:
+        gain_stacks = jnp.asarray(gain_stacks, jnp.float32)
+        incumbents = jnp.asarray(init if incumbents is None else incumbents,
+                                 jnp.int32)
+    else:
+        incumbents = None
+    if tail_inits is not None:
+        tail_inits = jnp.asarray(tail_inits, jnp.int32)
 
-            return jax.vmap(one_c)(fleet.cells, init, fleet.mask, lam_v,
-                                   comps)
-
-        def one(cell, init_a, mask, l):
-            return search_core(cell, init_a, mask, l, cfg, max_rounds,
-                               escape_iters, top_k, n_starts)
-
-        return jax.vmap(one)(fleet.cells, init, fleet.mask, lam_v)
-    if incumbents is None:
-        incumbents = init
-
-    if comp_on:
-        def one_hc(cell, init_a, mask, l, gs, inc, ic):
-            return search_core(cell, init_a, mask, l, cfg, max_rounds,
-                               escape_iters, top_k, n_starts, gs,
-                               switch_cost, inc, ladder, ic)
-
-        return jax.vmap(one_hc)(fleet.cells, init, fleet.mask, lam_v,
-                                jnp.asarray(gain_stacks, jnp.float32),
-                                jnp.asarray(incumbents, jnp.int32), comps)
-
-    def one_h(cell, init_a, mask, l, gs, inc):
+    def one(cell, init_a, mask, l, extras):
+        gs, inc, ic, tl = extras
         return search_core(cell, init_a, mask, l, cfg, max_rounds,
                            escape_iters, top_k, n_starts, gs, switch_cost,
-                           inc)
+                           inc, ladder, ic, tl)
 
-    return jax.vmap(one_h)(fleet.cells, init, fleet.mask, lam_v,
-                           jnp.asarray(gain_stacks, jnp.float32),
-                           jnp.asarray(incumbents, jnp.int32))
+    return jax.vmap(one)(fleet.cells, init, fleet.mask, lam_v,
+                         (gain_stacks, incumbents, comps, tail_inits))
 
 
 def difficulty_proxy(fleet: FleetScenario) -> jnp.ndarray:

@@ -65,16 +65,24 @@ def count_handovers(prev_assigns: np.ndarray, assigns: np.ndarray,
 
 
 def estimate_switch_cost(fleet: fbatch.FleetScenario, assigns: np.ndarray,
-                         alloc: sroa.SroaResult, lam: float = 1.0) -> float:
+                         alloc: sroa.SroaResult, lam: float = 1.0,
+                         comps: np.ndarray | None = None,
+                         ladder=None) -> float:
     """Calibrate the per-handover charge from a live allocation.
 
     A handover forces one model re-upload over the new link; its weighted
     cost is approximately the user's CURRENT upload airtime cost,
-    ``E_com + lam * T_com = (p + lam) * s_bits / r``.  The fleet-mean over
+    ``E_com + lam * T_com = (p + lam) * s_eff / r``.  The fleet-mean over
     active users is a single scalar the engine can take as a static — an
     estimate, not an oracle: the post-handover rate differs, but the scale
     (seconds of airtime, not slots of eq-15 cost) is what matters for the
     descent trade-off.
+
+    ``s_eff`` is the user's EFFECTIVE on-wire payload
+    ``s_bits * size_mult * bytes_factor[comp]`` (D11): a small-tier or
+    compressed user re-uploads fewer bits, so its handover is cheaper.
+    ``comps``/``ladder`` None falls back to tier sizes alone (all-ones
+    multipliers reproduce the pre-tier raw-``s_bits`` calibration bitwise).
     """
     assigns = np.asarray(assigns, np.int32)
     gain = np.asarray(fleet.cells.gain, np.float64)          # (C, N, M)
@@ -86,7 +94,12 @@ def estimate_switch_cost(fleet: fbatch.FleetScenario, assigns: np.ndarray,
     r = np.asarray(rate(jnp.asarray(b), jnp.asarray(g_own),
                         jnp.asarray(p), jnp.asarray(N0)), np.float64)
     s_bits = np.asarray(fleet.cells.s_bits, np.float64)[:, None]
-    t_up = np.where(r > 0, s_bits / np.maximum(r, 1e-9), 0.0)
+    s_eff = s_bits * np.asarray(fleet.cells.size_mult, np.float64)
+    if comps is not None and ladder is not None:
+        bf = np.asarray(ladder.bytes_factors(), np.float64)
+        s_eff = s_eff * bf[np.clip(np.asarray(comps, np.int64), 0,
+                                   len(ladder) - 1)]
+    t_up = np.where(r > 0, s_eff / np.maximum(r, 1e-9), 0.0)
     w = np.asarray(fleet.mask, bool)
     cost = (p + lam) * t_up
     n_act = max(int(w.sum()), 1)
@@ -106,7 +119,8 @@ def plan_fleet_horizon(fleet: fbatch.FleetScenario,
                        mesh=None, rows: np.ndarray | None = None,
                        gain_stacks: np.ndarray | None = None,
                        ladder=None,
-                       init_comps: np.ndarray | None = None
+                       init_comps: np.ndarray | None = None,
+                       tail_inits: np.ndarray | None = None
                        ) -> fengine.EngineResult:
     """MPC plan for every cell of a fleet in ONE device call.
 
@@ -119,7 +133,9 @@ def plan_fleet_horizon(fleet: fbatch.FleetScenario,
     the stacks (e.g. to digest them for a cache key) pass ``gain_stacks``
     and skip the rollout.  ``ladder``/``init_comps`` turn per-user
     compression into a joint decision variable (D11) — the horizon and
-    compression objectives compose.
+    compression objectives compose.  ``tail_inits`` (C, N) feeds each
+    cell's receding-horizon warm start (the previous window's winner) as
+    an extra engine restart, so warm planning never loses to cold.
     """
     stacks = (gain_stacks if gain_stacks is not None
               else dynamics.predict_fleet_rollout(fleet, state, K,
@@ -134,4 +150,6 @@ def plan_fleet_horizon(fleet: fbatch.FleetScenario,
         else jnp.asarray(np.asarray(incumbents), jnp.int32),
         ladder=ladder,
         init_comps=None if init_comps is None
-        else jnp.asarray(np.asarray(init_comps), jnp.int32))
+        else jnp.asarray(np.asarray(init_comps), jnp.int32),
+        tail_inits=None if tail_inits is None
+        else jnp.asarray(np.asarray(tail_inits), jnp.int32))

@@ -266,6 +266,13 @@ def replan(scn: Scenario, prev_assign: np.ndarray, lam=1.0,
     """
     init = np.array(prev_assign, np.int32).copy()
     init = np.clip(init, 0, scn.M - 1)
+    if scn.edge_mask is not None:
+        # Topology changed under the deployed plan (D12): re-home users
+        # whose edge closed to their nearest OPEN edge before polishing.
+        em = np.asarray(scn.edge_mask, bool)
+        if not em.all():
+            ne_open = np.asarray(nearest_edge_assignment(scn))
+            init = np.where(em[init], init, ne_open).astype(np.int32)
     if new_users is not None and len(new_users):
         ne = np.asarray(nearest_edge_assignment(scn))
         init[np.asarray(new_users, int)] = ne[np.asarray(new_users, int)]

@@ -64,6 +64,11 @@ class ServiceConfig:
     switch_cost: float = 0.0   # weighted-cost charge per handover (D10)
     ladder: object = None      # CompressionLadder: >= 2 rungs makes
     #                            per-user compression a decision var (D11)
+    topology_period: int = 0   # redesign the edge topology every P ticks
+    #                            (0 = off; needs a fleet with an edge_mask
+    #                            — the slow timescale of D12)
+    topology: object = None    # TopologyConfig for the redesign (None =
+    #                            defaults; edge_cost lives here)
 
 
 class TickRecord(NamedTuple):
@@ -77,6 +82,7 @@ class TickRecord(NamedTuple):
     tick_ms: float
     drift: fdrift.DriftReport | None
     handovers: int = 0         # active users whose edge changed this tick
+    topo_moves: int = 0        # topology moves accepted this tick (D12)
 
 
 class PlanningService:
@@ -113,7 +119,8 @@ class PlanningService:
     def _horizon_mode(self) -> bool:
         return self.cfg.horizon > 1 or self.cfg.switch_cost != 0.0
 
-    def _engine(self, fleet, init_assigns, rows=None, init_comps=None):
+    def _engine(self, fleet, init_assigns, rows=None, init_comps=None,
+                tail_inits=None):
         gs = inc = None
         sc = 0.0
         if self._horizon_mode():
@@ -133,7 +140,8 @@ class PlanningService:
             self.cfg.max_rounds, self.cfg.escape_iters, mesh=self.mesh,
             top_k=self.cfg.top_k, n_starts=self.cfg.n_starts,
             gain_stacks=gs, switch_cost=sc, incumbents=inc,
-            ladder=self.ladder, init_comps=init_comps)
+            ladder=self.ladder, init_comps=init_comps,
+            tail_inits=tail_inits)
 
     def _reprice(self) -> sroa.SroaResult:
         """Batched SROA of the current assignments under the live channel."""
@@ -148,6 +156,12 @@ class PlanningService:
         # Deployed compression levels ride with the assignments (level 0 ==
         # uncompressed when the ladder is off, so the array always exists).
         self.comps = np.asarray(out.comp).copy()
+        # Receding-horizon warm-start stash (D10): each cell's previous
+        # winning window pattern, fed to the next replan as an EXTRA engine
+        # restart (so warm search never loses to cold).
+        self._tail = (self.assigns.copy()
+                      if self._horizon_mode() and self.cfg.warm_start
+                      else None)
         self.alloc = self._reprice()
         self.gain_ref = np.asarray(self.fleet.cells.gain,
                                    np.float64).copy()
@@ -228,9 +242,51 @@ class PlanningService:
                 if ev is not None:
                     ic = np.where(ev.arrived[pidx], 0, ic)
                 icomp = jnp.asarray(ic, jnp.int32)
-        out = self._engine(sub, init, rows=pidx, init_comps=icomp)
+        # Receding-horizon warm start (D10): the previous window's winner
+        # rides as one extra restart row (engine re-homes it off closed
+        # edges), so warm MPC search never loses to a cold one.
+        tails = (jnp.asarray(self._tail[pidx], jnp.int32)
+                 if self._tail is not None else None)
+        out = self._engine(sub, init, rows=pidx, init_comps=icomp,
+                           tail_inits=tails)
         self.assigns[idx] = np.asarray(out.assign)[:k]
         self.comps[idx] = np.asarray(out.comp)[:k]
+        if self._tail is not None:
+            self._tail[idx] = np.asarray(out.assign)[:k]
+
+    # ------------------------------------------------------------- topology
+    def _redesign_topology(self) -> int:
+        """Slow-timescale edge redesign (D12): rerun the bilevel search.
+
+        Runs :func:`repro.fleet.topology.design_topology` from the CURRENT
+        mask and assignments (warm bilevel restart), installs the winning
+        mask on the live fleet and refreshes plans/caches for every cell
+        whose topology changed.  Returns the number of accepted moves.
+        """
+        from repro.fleet import topology as ftopo
+        tcfg = self.cfg.topology or ftopo.TopologyConfig()
+        old = np.asarray(self.fleet.cells.edge_mask, bool).copy()
+        res = ftopo.design_topology(
+            self.fleet, self.lam, self.sroa_cfg, tcfg,
+            init_assigns=self.assigns,
+            max_rounds=self.cfg.max_rounds,
+            escape_iters=self.cfg.escape_iters,
+            top_k=self.cfg.top_k, n_starts=self.cfg.n_starts)
+        moved = np.flatnonzero(
+            (np.asarray(res.edge_mask, bool) != old).any(axis=1))
+        if moved.size:
+            self.fleet = res.fleet
+            self.assigns[moved] = res.assigns[moved]
+            if self._tail is not None:
+                self._tail[moved] = res.assigns[moved]
+            # New sites mean new geometry references: reset the drift
+            # baseline so the redesign itself doesn't read as drift.
+            self.alloc = self._reprice()
+            self.gain_ref[moved] = np.asarray(self.fleet.cells.gain,
+                                              np.float64)[moved]
+            self.R_ref[moved] = np.asarray(self.alloc.R, np.float64)[moved]
+            self._install_cache(moved)
+        return len(res.history)
 
     # ---------------------------------------------------------------- serve
     def submit(self) -> PlanRequest:
@@ -250,6 +306,14 @@ class PlanningService:
             self.fleet, self.state, ev = dynamics.fleet_step(
                 self.fleet, self.state, self.rng, cfg=self.cfg.stream,
                 spec=self.spec, cell_mask=cm)
+
+        # Slow-timescale topology redesign (D12): every P ticks, re-open the
+        # edge placement question under the drifted geometry.
+        topo_moves = 0
+        if (self.cfg.topology_period and self.tick_idx > 0
+                and self.tick_idx % self.cfg.topology_period == 0
+                and self.fleet.cells.edge_mask is not None):
+            topo_moves = self._redesign_topology()
 
         gain_now = np.asarray(self.fleet.cells.gain, np.float64)
         alloc = self._reprice()
@@ -329,7 +393,7 @@ class PlanningService:
                          engine_calls=engine_calls, sum_R=sum_R,
                          served=served, coalesced=coalesced,
                          tick_ms=tick_ms, drift=report,
-                         handovers=handovers)
+                         handovers=handovers, topo_moves=topo_moves)
         self.tick_idx += 1
         return rec
 

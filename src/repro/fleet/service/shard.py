@@ -29,57 +29,31 @@ from repro.runtime.sharding import cell_mesh  # noqa: F401  (re-export)
 @lru_cache(maxsize=None)
 def _sharded_solver(mesh: Mesh, cfg: sroa.SroaConfig, max_rounds: int,
                     escape_iters: int, top_k: int = 0, n_starts: int = 1,
-                    switch_cost: float = 0.0, horizon: bool = False,
-                    ladder=None):
+                    switch_cost: float = 0.0, ladder=None):
     """Build (once per mesh/config) the jitted shard-mapped fleet solver.
 
+    The optional operands — horizon gain stacks + incumbents (D10),
+    per-user init comps (D11), receding-horizon warm-start tails — ride in
+    ONE extras pytree whose ``None`` members are empty subtrees: each
+    on/off combination is a distinct treedef, so the jit wrapper compiles
+    one program per combination without hand-written local variants, and
+    every present leaf shards over the cell axis like the fleet leaves.
     ``ladder`` (a hashable :class:`repro.fed.compression.CompressionLadder`)
-    joins the cache key and, when comp mode is on, adds a sharded
-    per-user init-comp operand (D11).
+    joins the cache key because it reaches the engine as a static.
     """
     axis = mesh.axis_names[0]
-    comp_on = fengine._comp_enabled(ladder)
 
-    if horizon and comp_on:
-        def local(cells, init, mask, lam_v, gains, incs, comps):
-            def one(cell, ia, mk, lam, gs, inc, cp):
-                return fengine.search_core(cell, ia, mk, lam, cfg,
-                                           max_rounds, escape_iters, top_k,
-                                           n_starts, gs, switch_cost, inc,
-                                           ladder, cp)
-            return jax.vmap(one)(cells, init, mask, lam_v, gains, incs,
-                                 comps)
-        n_in = 7
-    elif horizon:
-        # Horizon operands (predicted-gain stacks + incumbent assignments)
-        # shard over the cell axis exactly like the fleet leaves.
-        def local(cells, init, mask, lam_v, gains, incs):
-            def one(cell, ia, mk, lam, gs, inc):
-                return fengine.search_core(cell, ia, mk, lam, cfg,
-                                           max_rounds, escape_iters, top_k,
-                                           n_starts, gs, switch_cost, inc)
-            return jax.vmap(one)(cells, init, mask, lam_v, gains, incs)
-        n_in = 6
-    elif comp_on:
-        def local(cells, init, mask, lam_v, comps):
-            def one(cell, ia, mk, lam, cp):
-                return fengine.search_core(cell, ia, mk, lam, cfg,
-                                           max_rounds, escape_iters, top_k,
-                                           n_starts, None, 0.0, None,
-                                           ladder, cp)
-            return jax.vmap(one)(cells, init, mask, lam_v, comps)
-        n_in = 5
-    else:
-        def local(cells, init, mask, lam_v):
-            def one(cell, ia, mk, lam):
-                return fengine.search_core(cell, ia, mk, lam, cfg,
-                                           max_rounds, escape_iters, top_k,
-                                           n_starts)
-            return jax.vmap(one)(cells, init, mask, lam_v)
-        n_in = 4
+    def local(cells, init, mask, lam_v, extras):
+        def one(cell, ia, mk, lam, ex):
+            gs, inc, cp, tl = ex
+            return fengine.search_core(cell, ia, mk, lam, cfg,
+                                       max_rounds, escape_iters, top_k,
+                                       n_starts, gs, switch_cost, inc,
+                                       ladder, cp, tl)
+        return jax.vmap(one)(cells, init, mask, lam_v, extras)
 
     fn = shard_map(local, mesh=mesh,
-                   in_specs=(P(axis),) * n_in,
+                   in_specs=(P(axis),) * 5,
                    out_specs=P(axis),
                    # the engine is a lax.while_loop, which has no
                    # replication rule — and needs none: every input and
@@ -106,7 +80,8 @@ def solve_fleet_sharded(fleet: fbatch.FleetScenario,
                         switch_cost: float = 0.0,
                         incumbents: jnp.ndarray | None = None,
                         ladder=None,
-                        init_comps: jnp.ndarray | None = None
+                        init_comps: jnp.ndarray | None = None,
+                        tail_inits: jnp.ndarray | None = None
                         ) -> fengine.EngineResult:
     """Fleet-wide assignment search, sharded over devices when available.
 
@@ -118,7 +93,7 @@ def solve_fleet_sharded(fleet: fbatch.FleetScenario,
     (DESIGN.md D9); ``gain_stacks`` (C, K, N, M) with
     ``switch_cost``/``incumbents`` the rolling-horizon knobs (D10) — the
     per-cell predicted stacks shard over the cell axis like every other
-    fleet leaf.
+    fleet leaf; ``tail_inits`` (C, N) the receding-horizon warm starts.
     """
     if init_assigns is None:
         init_assigns = fbatch.fleet_assignments(fleet)
@@ -134,7 +109,7 @@ def solve_fleet_sharded(fleet: fbatch.FleetScenario,
             fleet, init_assigns, lam, cfg, max_rounds, escape_iters,
             top_k, n_starts, gain_stacks=gain_stacks,
             switch_cost=switch_cost, incumbents=incumbents,
-            ladder=ladder, init_comps=init_comps)
+            ladder=ladder, init_comps=init_comps, tail_inits=tail_inits)
     C = fleet.C
     ndev = int(np.prod(mesh.devices.shape))
     pad = (-C) % ndev
@@ -143,20 +118,18 @@ def solve_fleet_sharded(fleet: fbatch.FleetScenario,
     cells, mask = fleet.cells, fleet.mask
     horizon = gain_stacks is not None
     comp_on = fengine._comp_enabled(ladder)
-    operands = [cells, init, mask, lam_v]
-    if horizon:
-        operands.append(jnp.asarray(gain_stacks, jnp.float32))
-        operands.append(init if incumbents is None
-                        else jnp.asarray(incumbents, jnp.int32))
-    if comp_on:
-        operands.append(jnp.zeros(init.shape, jnp.int32)
-                        if init_comps is None
-                        else jnp.asarray(init_comps, jnp.int32))
+    gs = jnp.asarray(gain_stacks, jnp.float32) if horizon else None
+    incs = (init if incumbents is None
+            else jnp.asarray(incumbents, jnp.int32)) if horizon else None
+    comps = (jnp.zeros(init.shape, jnp.int32) if init_comps is None
+             else jnp.asarray(init_comps, jnp.int32)) if comp_on else None
+    tails = (None if tail_inits is None
+             else jnp.asarray(tail_inits, jnp.int32))
+    operands = [cells, init, mask, lam_v, (gs, incs, comps, tails)]
     if pad:
         operands = [_pad_rows(t, pad) for t in operands]
     out = _sharded_solver(mesh, cfg, max_rounds, escape_iters, top_k,
-                          n_starts, float(switch_cost),
-                          horizon, ladder)(*operands)
+                          n_starts, float(switch_cost), ladder)(*operands)
     if pad:
         out = jax.tree.map(lambda x: x[:C], out)
     return out

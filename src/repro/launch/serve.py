@@ -78,13 +78,21 @@ def _draw_serve_fleet(args):
     from repro.core.wireless import ScenarioSpec
     from repro.fleet import draw_fleet
 
+    # Topology mode (D12): draw M_cand candidate sites per cell but open
+    # only --cell-edges of them; the service's periodic redesign decides
+    # which (and how many) stay open.
+    m_cand = max(args.m_cand, args.cell_edges)
     spec = dataclasses.replace(ScenarioSpec(), N=args.cell_users,
-                               M=args.cell_edges,
+                               M=m_cand,
                                tiers=_parse_tiers(args.tiers)
                                if args.tiers else ())
     n_lo = min(max(4, args.cell_users // 2), args.cell_users)
     fleet = draw_fleet(args.seed, args.cells, spec,
                        n_range=(n_lo, args.cell_users))
+    if m_cand > args.cell_edges or args.topology_period:
+        from repro.fleet import topology as ftopo
+        fleet = ftopo.with_edge_mask(
+            fleet, ftopo.uniform_mask(fleet.C, m_cand, args.cell_edges))
     cfg = sroa.SroaConfig(b_iters=30, f_iters=24, p_iters=20, t_iters=28)
     return spec, fleet, cfg
 
@@ -98,6 +106,10 @@ def run_service(args) -> dict:
 
     spec, fleet, cfg = _draw_serve_fleet(args)
     ladder = _serve_ladder(args)
+    topo = None
+    if args.topology_period:
+        from repro.fleet.topology import TopologyConfig
+        topo = TopologyConfig(edge_cost=args.edge_cost)
     svc_cfg = ServiceConfig(
         drift=DriftConfig(channel_threshold=args.drift_threshold,
                           objective_threshold=args.obj_threshold),
@@ -105,7 +117,8 @@ def run_service(args) -> dict:
         max_rounds=args.plan_rounds, escape_iters=2,
         top_k=args.top_k, n_starts=args.n_starts,
         horizon=args.horizon, switch_cost=args.switch_cost,
-        ladder=ladder)
+        ladder=ladder, topology_period=args.topology_period,
+        topology=topo)
     mode = "replan-all" if args.replan_all else "drift-gated"
     if args.horizon > 1 or args.switch_cost:
         mode += (f", horizon K={args.horizon}"
@@ -114,6 +127,9 @@ def run_service(args) -> dict:
         mode += f", {len(spec.tiers)} device tiers"
     if ladder is not None:
         mode += f", compression ladder ({len(ladder)} rungs)"
+    if args.topology_period:
+        mode += (f", topology redesign every {args.topology_period} ticks "
+                 f"(M_cand={fleet.M}, edge_cost={args.edge_cost:g})")
     print(f"[serve] fleet: {fleet.C} cells, N_max={fleet.N_max}, "
           f"M={fleet.M} (streaming control plane, {mode})")
     t0 = time.time()
@@ -123,10 +139,11 @@ def run_service(args) -> dict:
           f"in {time.time() - t0:.2f}s")
 
     def on_tick(rec):
+        topo = (f", {rec.topo_moves} topo moves" if rec.topo_moves else "")
         print(f"[serve] tick {rec.tick}: {rec.changed} changed, "
               f"{rec.replanned.size} replanned, {rec.served} served "
               f"(coalesced {rec.coalesced}), sum R={rec.sum_R:.1f}, "
-              f"{rec.tick_ms:.0f}ms")
+              f"{rec.tick_ms:.0f}ms{topo}")
 
     snap = run_load(svc, ticks=args.rounds, req_per_tick=args.req_rate,
                     seed=args.seed + 7, on_tick=on_tick)
@@ -221,6 +238,18 @@ def main(argv=None):
     ap.add_argument("--switch-cost", type=float, default=0.0,
                     help="weighted-cost charge per handover off the "
                          "deployed assignment (rolling-horizon mode)")
+    ap.add_argument("--topology-period", type=int, default=0,
+                    help="streaming mode: redesign edge placement/"
+                         "activation every P ticks (0 = fixed topology; "
+                         "D12)")
+    ap.add_argument("--edge-cost", type=float, default=0.0,
+                    help="weighted-cost charge per OPEN edge site in the "
+                         "topology design objective (D12)")
+    ap.add_argument("--m-cand", type=int, default=0,
+                    help="candidate edge sites per cell; --cell-edges of "
+                         "them start open and the redesign may relocate "
+                         "activation among all of them (0 = no candidate "
+                         "pool: M = --cell-edges)")
     ap.add_argument("--tiers", default="",
                     help="device tiers, comma-separated "
                          "name[:cycle_mult[:size_mult[:f_scale[:prob]]]] "

@@ -204,3 +204,80 @@ def test_incremental_replan_forwards_horizon_to_engine():
                              switch_cost=1e12)
     # The incumbent is the warm start: at a prohibitive price nothing moves.
     np.testing.assert_array_equal(res.assign, base.assign)
+
+
+def test_estimate_switch_cost_compression_reduces_charge():
+    """D11 x D10: a compressed user re-uploads fewer bits, so its
+    handover is cheaper — and level-0 rungs reproduce the ladder-free
+    calibration bitwise."""
+    from repro.fed.compression import default_ladder
+
+    fleet, _ = make_fleet_state()
+    ladder = default_ladder()
+    init = fbatch.fleet_assignments(fleet)
+    alloc = fbatch.solve_batch(fleet, jnp.asarray(init), LAM, CFG)
+    base = fhorizon.estimate_switch_cost(fleet, init, alloc, lam=LAM)
+    zeros = np.zeros((fleet.C, fleet.N_max), np.int32)
+    assert fhorizon.estimate_switch_cost(
+        fleet, init, alloc, lam=LAM, comps=zeros, ladder=ladder) == base
+    top = np.full_like(zeros, len(ladder) - 1)
+    squeezed = fhorizon.estimate_switch_cost(
+        fleet, init, alloc, lam=LAM, comps=top, ladder=ladder)
+    assert 0 < squeezed < base
+
+
+# ------------------------------------------------ AR(1) shadowing decay
+def test_rollout_shadow_decays_toward_geometry():
+    """With block fading on, predicted shadowing mean-reverts to 0 dB:
+    the gap to the geometry-only rollout shrinks every slot (slot 0 is
+    the live channel for both, so compare k >= 1)."""
+    fleet, state = make_fleet_state(seed=7)
+    cfg = dynamics.StreamConfig(fading_every=4)
+    with_sh = np.asarray(dynamics.predict_fleet_rollout(
+        fleet, state, K=6, cfg=cfg), np.float64)
+    geo = np.asarray(dynamics.predict_fleet_rollout(
+        fleet, state._replace(shadow_ue_db=state.shadow_ue_db * 0.0),
+        K=6, cfg=cfg), np.float64)
+    gap = np.abs(np.log(with_sh) - np.log(geo)).mean(axis=(0, 2, 3))
+    assert gap[0] == 0         # slot 0 is the live channel for BOTH
+    assert gap[1] > 0          # predicted slots still carry shadowing ...
+    assert np.all(np.diff(gap[1:]) < 0)   # ... mean-reverting every slot
+    # ... at exactly the AR(1) rate rho = 1 - 1/fading_every.
+    np.testing.assert_allclose(gap[2:] / gap[1:-1], 0.75, rtol=1e-6)
+
+
+def test_rollout_fading_every_zero_freezes_shadowing():
+    """fading_every=0 means the block never redraws: rho=1, the shadow
+    rides every predicted slot unchanged (the pre-AR(1) behavior the
+    horizon bench pins bitwise)."""
+    fleet, state = make_fleet_state(seed=7)
+    cfg = dynamics.StreamConfig(fading_every=0)
+    with_sh = np.asarray(dynamics.predict_fleet_rollout(
+        fleet, state, K=5, cfg=cfg), np.float64)
+    geo = np.asarray(dynamics.predict_fleet_rollout(
+        fleet, state._replace(shadow_ue_db=state.shadow_ue_db * 0.0),
+        K=5, cfg=cfg), np.float64)
+    gap = np.abs(np.log(with_sh) - np.log(geo)).mean(axis=(0, 2, 3))
+    np.testing.assert_allclose(gap[1:], gap[1], rtol=1e-6)
+    # Slot 0 stays the live channel bitwise regardless of the cadence.
+    np.testing.assert_array_equal(
+        with_sh[:, 0].astype(np.float32),
+        np.asarray(fleet.cells.gain, np.float32))
+
+
+# ------------------------------------------- receding-horizon warm start
+def test_tail_init_warm_start_never_worse():
+    """The previous window's winner rides as an EXTRA restart, so warm
+    MPC search minimizes over a superset of the cold start set."""
+    fleet, state = make_fleet_state(seed=2)
+    init = fbatch.fleet_assignments(fleet)
+    cold = fhorizon.plan_fleet_horizon(
+        fleet, state, K=3, switch_cost=5.0, incumbents=init,
+        init_assigns=init, lam=LAM, cfg=CFG, max_rounds=4,
+        escape_iters=1)
+    warm = fhorizon.plan_fleet_horizon(
+        fleet, state, K=3, switch_cost=5.0, incumbents=init,
+        init_assigns=init, lam=LAM, cfg=CFG, max_rounds=4,
+        escape_iters=1, tail_inits=np.asarray(cold.assign))
+    assert np.all(np.asarray(warm.R_search)
+                  <= np.asarray(cold.R_search) + 1e-6)

@@ -1,0 +1,245 @@
+"""Topology design subsystem tests — DESIGN.md D12.
+
+Pins the contracts the bilevel topology layer ships with:
+
+* an ALL-OPEN edge mask is bitwise the fixed-M path (engine, fused
+  kernel, shard_mapped fleet) — masking is a select, never a rewrite;
+* closed sites are hard-excluded: no candidate move, escape target,
+  warm start, or final assignment may land on one;
+* the planner cache key distinguishes masks (a redesign can never
+  serve a stale fixed-topology plan);
+* :func:`design_topology` is greedy-monotone, conserves the open count
+  under ``fixed_count``, and beats fixed uniform placement at equal
+  open-edge count on a small fleet (the bench claim, smoke-sized).
+
+Shapes stay small and share one SroaConfig so the engine compiles a
+handful of programs per test session.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sroa, wireless
+from repro.fleet import batch as fbatch
+from repro.fleet import engine as fengine
+from repro.fleet import incremental
+from repro.fleet import topology as ftopo
+from repro.fleet.planner import FleetPlanner, scenario_digest
+from repro.fleet.service import shard as fshard
+
+CFG = sroa.SroaConfig(b_iters=12, f_iters=8, p_iters=6, t_iters=8)
+SPEC = dataclasses.replace(wireless.ScenarioSpec(), N=8, M=4)
+LAM = 1.0
+
+
+def make_fleet(seed=0, C=3, spec=SPEC):
+    return fbatch.draw_fleet(seed, C, spec, n_range=(6, 8))
+
+
+def _solve(fleet, **kw):
+    init = fbatch.fleet_assignments(fleet)
+    return fengine.solve_fleet_assignments(fleet, init, LAM, CFG,
+                                           max_rounds=6, escape_iters=2,
+                                           **kw)
+
+
+# ------------------------------------------------------ all-open parity
+@pytest.mark.parametrize("kw", [{}, {"top_k": 4}, {"n_starts": 3},
+                                {"top_k": 4, "n_starts": 3}])
+def test_all_open_mask_is_bitwise_fixed_m(kw):
+    """edge_mask=ones must reproduce the no-mask path BIT-identically on
+    every engine route: the mask only ever enters as a select."""
+    fleet = make_fleet()
+    want = _solve(fleet, **kw)
+    got = _solve(ftopo.with_edge_mask(
+        fleet, np.ones((fleet.C, fleet.M), bool)), **kw)
+    np.testing.assert_array_equal(np.asarray(got.assign),
+                                  np.asarray(want.assign))
+    np.testing.assert_array_equal(np.asarray(got.R), np.asarray(want.R))
+    np.testing.assert_array_equal(np.asarray(got.sroa.b),
+                                  np.asarray(want.sroa.b))
+    np.testing.assert_array_equal(np.asarray(got.sroa.p),
+                                  np.asarray(want.sroa.p))
+
+
+def test_all_open_parity_fused_kernel():
+    """The fused Pallas SROA path sees the same B under an all-open mask."""
+    fleet = make_fleet()
+    fcfg = dataclasses.replace(CFG, fused=True)
+    init = jnp.asarray(fbatch.fleet_assignments(fleet))
+    want = fbatch.solve_batch(fleet, init, LAM, fcfg)
+    got = fbatch.solve_batch(
+        ftopo.with_edge_mask(fleet, np.ones((fleet.C, fleet.M), bool)),
+        init, LAM, fcfg)
+    np.testing.assert_array_equal(np.asarray(got.b), np.asarray(want.b))
+    np.testing.assert_array_equal(np.asarray(got.R), np.asarray(want.R))
+
+
+def test_all_open_parity_shard_mapped():
+    fleet = make_fleet()
+    init = fbatch.fleet_assignments(fleet)
+    mesh = fshard.cell_mesh()
+    want = fshard.solve_fleet_sharded(fleet, init, LAM, CFG, 6, 2,
+                                      mesh=mesh)
+    got = fshard.solve_fleet_sharded(
+        ftopo.with_edge_mask(fleet, np.ones((fleet.C, fleet.M), bool)),
+        init, LAM, CFG, 6, 2, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(got.assign),
+                                  np.asarray(want.assign))
+    np.testing.assert_array_equal(np.asarray(got.R), np.asarray(want.R))
+
+
+# -------------------------------------------------- closed-site exclusion
+@pytest.mark.parametrize("kw", [{}, {"top_k": 4}, {"n_starts": 3}])
+def test_closed_sites_are_never_assigned(kw):
+    fleet = make_fleet(seed=1)
+    em = np.ones((fleet.C, fleet.M), bool)
+    em[:, 0] = False          # close every cell's site 0 ...
+    em[1, 2] = False          # ... and one more in cell 1
+    out = _solve(ftopo.with_edge_mask(fleet, em), **kw)
+    a = np.asarray(out.assign)
+    active = np.asarray(fleet.mask, bool)
+    on_open = np.take_along_axis(em, a, axis=1)
+    assert on_open[active].all()
+    assert np.all(np.isfinite(np.asarray(out.R)))
+
+
+def test_warm_start_on_closed_edge_is_rehomed():
+    """A deployed plan whose edge a redesign closed must still replan
+    cleanly — the engine re-homes the warm start to an open site."""
+    fleet = make_fleet(seed=2)
+    scn = fleet.cell(0)
+    base = incremental.solve(scn, LAM, CFG, max_rounds=4, escape_iters=1)
+    em = np.ones(scn.M.item() if hasattr(scn.M, "item") else scn.M, bool)
+    em[np.asarray(base.assign)[0]] = False   # close user 0's edge
+    scn2 = scn._replace(edge_mask=jnp.asarray(em))
+    res = incremental.replan(scn2, base.assign, LAM, CFG, max_rounds=4,
+                             escape_iters=1)
+    a = np.asarray(res.assign)
+    assert em[a].all()
+
+
+def test_validate_scenario_rejects_bad_masks():
+    scn = wireless.draw_scenario(0, dataclasses.replace(SPEC))
+    bad_shape = scn._replace(edge_mask=jnp.ones(scn.gain.shape[1] + 1,
+                                                bool))
+    with pytest.raises(ValueError):
+        wireless.validate_scenario(bad_shape)
+    all_closed = scn._replace(
+        edge_mask=jnp.zeros(scn.gain.shape[1], bool))
+    with pytest.raises(ValueError):
+        wireless.validate_scenario(all_closed)
+
+
+def test_b_open_sums_open_sites_only():
+    scn = wireless.draw_scenario(0, SPEC)
+    assert float(scn.B_open) == float(jnp.sum(scn.B_edges))
+    em = np.zeros(SPEC.M, bool)
+    em[1] = True
+    masked = scn._replace(edge_mask=jnp.asarray(em))
+    np.testing.assert_allclose(float(masked.B_open),
+                               float(scn.B_edges[1]))
+
+
+# ------------------------------------------------------- planner caching
+def test_planner_cache_distinguishes_masks():
+    fleet = make_fleet()
+    em = np.ones((fleet.C, fleet.M), bool)
+    em2 = em.copy()
+    em2[:, -1] = False
+    row = ftopo.with_edge_mask(fleet, em).cells
+    row2 = ftopo.with_edge_mask(fleet, em2).cells
+    import jax
+    d1 = scenario_digest(jax.tree.map(lambda x: x[0], row), LAM, None)
+    d2 = scenario_digest(jax.tree.map(lambda x: x[0], row2), LAM, None)
+    assert d1 != d2
+
+    planner = FleetPlanner(lam=LAM, cfg=CFG, max_rounds=4, escape_iters=1)
+    p1 = planner.plan(ftopo.with_edge_mask(fleet, em).cell(0))
+    hit = planner.plan(ftopo.with_edge_mask(fleet, em).cell(0))
+    assert hit.cached
+    p2 = planner.plan(ftopo.with_edge_mask(fleet, em2).cell(0))
+    assert not p2.cached
+    a2 = np.asarray(p2.assign)
+    assert (a2 != fleet.M - 1).all()          # closed site never served
+    assert np.isfinite(p1.R) and np.isfinite(p2.R)
+
+
+# ------------------------------------------------------- design helpers
+def test_uniform_mask_and_with_edge_mask_roundtrip():
+    em = ftopo.uniform_mask(3, 4, 2)
+    assert em.shape == (3, 4) and (em.sum(axis=1) == 2).all()
+    with pytest.raises(ValueError):
+        ftopo.uniform_mask(3, 4, 0)
+    fleet = make_fleet()
+    masked = ftopo.with_edge_mask(fleet, em)
+    assert masked.cells.edge_mask is not None
+    back = ftopo.with_edge_mask(masked, None)
+    assert back.cells.edge_mask is None
+
+
+def test_proxy_cost_penalizes_closing_bandwidth():
+    """Closing sites removes bandwidth and gain options: the proxy of a
+    strict sub-mask is never cheaper than all-open."""
+    fleet = make_fleet(seed=3)
+    all_open = np.ones((fleet.C, fleet.M), bool)
+    sub = all_open.copy()
+    sub[:, :2] = False
+    assert (ftopo.proxy_cost(fleet, sub, LAM)
+            >= ftopo.proxy_cost(fleet, all_open, LAM)).all()
+
+
+def test_remap_to_open_rehomes_only_closed_entries():
+    fleet = make_fleet()
+    em = np.ones((fleet.C, fleet.M), bool)
+    em[:, 0] = False
+    a = np.zeros((fleet.C, fleet.N_max), np.int32)   # everyone on closed 0
+    a[:, 0] = 1                                      # ... except user 0
+    out = ftopo._remap_to_open(a, em, fleet)
+    assert (out[:, 0] == 1).all()                    # open entry untouched
+    on_open = np.take_along_axis(em, out, axis=1)
+    assert on_open.all()
+
+
+# ------------------------------------------------------- bilevel design
+def test_design_topology_monotone_and_fixed_count():
+    fleet = make_fleet(seed=4)
+    em0 = ftopo.uniform_mask(fleet.C, fleet.M, 2)
+    topo = ftopo.TopologyConfig(fixed_count=True, max_rounds=4)
+    base = fengine.solve_fleet_assignments(
+        ftopo.with_edge_mask(fleet, em0),
+        fbatch.fleet_assignments(ftopo.with_edge_mask(fleet, em0)),
+        LAM, CFG, max_rounds=6, escape_iters=2)
+    res = ftopo.design_topology(fleet, LAM, CFG, topo, edge_mask=em0,
+                                max_rounds=6, escape_iters=2)
+    # fixed_count conserves the per-cell open count ...
+    np.testing.assert_array_equal(res.n_open, em0.sum(axis=1))
+    # ... and greedy accept is monotone vs the starting topology.
+    assert (res.total <= np.asarray(base.R) + 1e-6).all()
+    # The final assignment honors the final mask.
+    on_open = np.take_along_axis(res.edge_mask, res.assigns, axis=1)
+    assert on_open[np.asarray(fleet.mask, bool)].all()
+
+
+def test_designed_topology_beats_uniform_smoke():
+    """The bench claim, smoke-sized: relocating activation among the
+    candidate sites strictly beats fixed uniform placement at EQUAL
+    open-edge count on at least one cell (and never loses on any)."""
+    spec = dataclasses.replace(wireless.ScenarioSpec(), N=10, M=6)
+    fleet = fbatch.draw_fleet(3, 2, spec, n_range=(8, 10))
+    em0 = ftopo.uniform_mask(fleet.C, fleet.M, 3)
+    uni = ftopo.with_edge_mask(fleet, em0)
+    base = fengine.solve_fleet_assignments(
+        uni, fbatch.fleet_assignments(uni), LAM, CFG,
+        max_rounds=10, escape_iters=2)
+    res = ftopo.design_topology(
+        fleet, LAM, CFG, ftopo.TopologyConfig(fixed_count=True,
+                                              max_rounds=6),
+        edge_mask=em0, max_rounds=10, escape_iters=2)
+    np.testing.assert_array_equal(res.n_open, em0.sum(axis=1))
+    base_R = np.asarray(base.R, np.float64)
+    assert (res.R <= base_R + 1e-6).all()
+    assert res.R.sum() < base_R.sum() - 1e-6
+    assert len(res.history) >= 1
